@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: datasets, timed calls, paper-protocol means."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.symed import SymEDConfig, symed_batch
+from repro.data.synthetic import FAMILIES, make_dataset
+
+# benchmark-scale defaults (paper: 22 datasets x ~14 series x ~1673 points;
+# here: 5 synthetic families x N series x L points -- same protocol, equal
+# weights per family then mean over families)
+N_SERIES = 4
+LENGTH = 1000
+TOLS = tuple(round(0.1 * i, 1) for i in range(1, 21, 2))  # 0.1..1.9
+
+
+def datasets(n_series: int = N_SERIES, length: int = LENGTH) -> Dict[str, np.ndarray]:
+    return {f: make_dataset(f, n_series, length, seed=11) for f in FAMILIES}
+
+
+def equal_weight_mean(per_family: Dict[str, np.ndarray]) -> float:
+    """Paper protocol: mean within dataset, then across datasets."""
+    return float(np.mean([np.mean(v) for v in per_family.values()]))
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+    return out, (time.perf_counter() - t0) / iters
+
+
+def symed_over_datasets(cfg: SymEDConfig, data: Dict[str, np.ndarray],
+                        reconstruct: bool = True):
+    out = {}
+    for fam, series in data.items():
+        out[fam] = symed_batch(jnp.asarray(series), cfg, jax.random.key(0),
+                               reconstruct=reconstruct)
+    return out

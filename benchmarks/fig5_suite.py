@@ -1,0 +1,124 @@
+"""Paper Fig. 5 reproduction suite: one function per sub-figure.
+
+  5a  reconstruction error (DTW) vs tol  -- ABBA symbols / SymED symbols /
+      SymED pieces (the paper's headline: pieces ~half the symbol error)
+  5b  compression rate vs tol            -- CR_ABBA < CR_SymED (Eq. 3)
+  5c  dimension-reduction rate vs tol
+  5d  per-symbol latency (sender / receiver)
+  5e  total conversion latency (ABBA offline vs SymED online)
+
+Each returns CSV rows (name, us_per_call, derived) and a summary dict that
+EXPERIMENTS.md quotes.  Synthetic UCR-like families stand in for the archive
+(see repro/data/synthetic.py); the paper's equal-weight protocol is kept.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import abba_encode, dtw_ref
+from repro.core.metrics import compression_rate_abba
+from repro.core.reconstruct import reconstruct_from_symbols
+from repro.core.symed import SymEDConfig, symed_encode
+
+from benchmarks.common import LENGTH, TOLS, datasets, equal_weight_mean, timed, symed_over_datasets
+
+
+def _symed_cfg(tol):
+    return SymEDConfig(tol=tol, alpha=0.01, scl=1.0, n_max=256, k_max=64,
+                       len_max=256)
+
+
+def _abba_recon_scores(series: np.ndarray, tol: float) -> np.ndarray:
+    """ABBA: encode offline, reconstruct from symbols, DTW in raw space."""
+    scores = []
+    for row in series:
+        res = abba_encode(jnp.asarray(row), n_max=256, tol=tol, scl=1.0,
+                          len_max=256, k_max=64)
+        rec_n = reconstruct_from_symbols(
+            res.labels, res.centers, res.n_pieces,
+            jnp.float32((row[0] - float(res.mean)) / float(res.std)),
+            len(row),
+        )
+        rec = rec_n * res.std + res.mean
+        scores.append(float(dtw_ref(jnp.asarray(row), rec)))
+    return np.asarray(scores)
+
+
+def run(tols=TOLS) -> Tuple[List[tuple], Dict]:
+    data = datasets()
+    rows: List[tuple] = []
+    summary = {"tol": list(tols), "re_abba": [], "re_symed_sym": [],
+               "re_symed_pieces": [], "cr_abba": [], "cr_symed": [],
+               "drr_abba": [], "drr_symed": [],
+               "sender_ms_per_symbol": None, "receiver_ms_per_symbol": None,
+               "total_s_abba": None, "total_s_symed": None}
+
+    # ---- 5a/5b/5c sweeps ---------------------------------------------------
+    for tol in tols:
+        cfg = _symed_cfg(tol)
+        t0 = time.perf_counter()
+        enc = symed_over_datasets(cfg, data)
+        jax.block_until_ready(enc[next(iter(enc))]["n_pieces"])
+        dt = time.perf_counter() - t0
+
+        re_p = equal_weight_mean({f: np.asarray(o["re_pieces"]) for f, o in enc.items()})
+        re_s = equal_weight_mean({f: np.asarray(o["re_symbols"]) for f, o in enc.items()})
+        cr_s = equal_weight_mean({f: np.asarray(o["cr"]) for f, o in enc.items()})
+        drr_s = equal_weight_mean({f: np.asarray(o["drr"]) for f, o in enc.items()})
+
+        abba_re, abba_cr, abba_drr = {}, {}, {}
+        for fam, series in data.items():
+            res = [abba_encode(jnp.asarray(r), n_max=256, tol=tol, scl=1.0,
+                               len_max=256, k_max=64) for r in series]
+            abba_cr[fam] = np.asarray([
+                float(compression_rate_abba(x.n_pieces, x.k, LENGTH)) for x in res
+            ])
+            abba_drr[fam] = np.asarray([
+                float(x.n_pieces) / LENGTH for x in res
+            ])
+            abba_re[fam] = _abba_recon_scores(series, tol)
+
+        summary["re_abba"].append(equal_weight_mean(abba_re))
+        summary["re_symed_sym"].append(re_s)
+        summary["re_symed_pieces"].append(re_p)
+        summary["cr_abba"].append(equal_weight_mean(abba_cr))
+        summary["cr_symed"].append(cr_s)
+        summary["drr_abba"].append(equal_weight_mean(abba_drr))
+        summary["drr_symed"].append(drr_s)
+        rows.append((f"fig5_sweep_tol{tol}", 1e6 * dt, re_p))
+
+    # ---- 5d: per-symbol online latencies ------------------------------------
+    stream = jnp.asarray(data["sensor"][0])
+    cfg = _symed_cfg(0.5)
+    from repro.core.compress import compress_stream
+    from repro.core.digitize import digitize_pieces
+    from repro.core.receiver import compact_events
+
+    ev, t_send = timed(
+        lambda: compress_stream(stream, tol=0.5, len_max=256, alpha=0.01))
+    wire = compact_events(ev, n_max=256, t0=stream[0])
+    n = max(int(wire["n_pieces"]), 1)
+    _, t_recv = timed(
+        lambda: digitize_pieces(wire["lengths"], wire["incs"], wire["n_pieces"],
+                                jax.random.key(0), k_cap=64, tol=0.5, scl=1.0,
+                                k_min=3, k_max_active=64))
+    summary["sender_ms_per_symbol"] = 1e3 * t_send / n
+    summary["receiver_ms_per_symbol"] = 1e3 * t_recv / n
+    rows.append(("fig5d_sender_per_symbol", 1e6 * t_send / n, n))
+    rows.append(("fig5d_receiver_per_symbol", 1e6 * t_recv / n, n))
+
+    # ---- 5e: total conversion latency ---------------------------------------
+    _, t_abba = timed(lambda: abba_encode(stream, n_max=256, tol=0.5, scl=1.0,
+                                          len_max=256, k_max=64))
+    _, t_symed = timed(lambda: symed_encode(stream, cfg, jax.random.key(0),
+                                            reconstruct=True))
+    summary["total_s_abba"] = t_abba
+    summary["total_s_symed"] = t_symed
+    rows.append(("fig5e_abba_total", 1e6 * t_abba, float(t_abba)))
+    rows.append(("fig5e_symed_total", 1e6 * t_symed, float(t_symed)))
+    return rows, summary

@@ -1,0 +1,33 @@
+"""Fleet-throughput benchmark (the TPU adaptation's headline table):
+streams/second for the batched SymED pipeline as the slab grows."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.symed import SymEDConfig, symed_batch
+from repro.data.synthetic import make_fleet
+
+from benchmarks.common import timed
+
+
+def run() -> Tuple[List[tuple], dict]:
+    cfg = SymEDConfig(tol=0.5, alpha=0.01, n_max=128, k_max=32, len_max=128)
+    rows: List[tuple] = []
+    summary = {}
+    for n_streams in (16, 64, 256):
+        fleet = jnp.asarray(make_fleet(n_streams, 512, seed=1))
+        out, dt = timed(
+            lambda f=fleet: symed_batch(f, cfg, jax.random.key(0),
+                                        reconstruct=False),
+            warmup=1, iters=2,
+        )
+        pts = n_streams * 512
+        rows.append((f"fleet_{n_streams}x512", 1e6 * dt, pts / dt))
+        summary[f"streams_{n_streams}"] = {
+            "points_per_s": pts / dt,
+            "mean_pieces": float(jnp.mean(out["n_pieces"])),
+        }
+    return rows, summary

@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+
+On this CPU container the interpret-mode timing validates dispatch overheads
+only; the DERIVED column is the max abs error vs the oracle (the correctness
+contract).  The same harness runs compiled on TPU.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import timed
+
+
+def run() -> Tuple[List[tuple], dict]:
+    rng = np.random.default_rng(0)
+    rows: List[tuple] = []
+
+    # ewma: fleet-shaped (streams x time)
+    ts = jnp.asarray(rng.normal(0, 2, (64, 2048)), jnp.float32)
+    (m1, v1), t_k = timed(lambda: ops.ewma_scan(ts, 0.02))
+    (m2, v2), t_r = timed(lambda: ref.ewma_scan_ref(ts, 0.02))
+    err = float(jnp.max(jnp.abs(v1 - v2)))
+    rows.append(("ewma_pallas_64x2048", 1e6 * t_k, err))
+    rows.append(("ewma_ref_64x2048", 1e6 * t_r, err))
+
+    # kmeans: SymED receiver shape (D=2) and MXU-shaped D=128
+    for d in (2, 128):
+        x = jnp.asarray(rng.normal(size=(8, 256, d)), jnp.float32)
+        mask = jnp.ones((8, 256), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(8, 64, d)), jnp.float32)
+        act = jnp.ones((8, 64), jnp.float32)
+        (l1, s1, c1), t_k = timed(lambda: ops.kmeans_assign(x, mask, c, act))
+        (l2, s2, c2), t_r = timed(lambda: ref.kmeans_assign_ref(x, mask, c, act))
+        err = float(jnp.max(jnp.abs(s1 - s2)))
+        rows.append((f"kmeans_pallas_8x256x{d}", 1e6 * t_k, err))
+        rows.append((f"kmeans_ref_8x256x{d}", 1e6 * t_r, err))
+
+    # dtw: reconstruction-error evaluation shape
+    x = jnp.asarray(rng.normal(size=(8, 512)).cumsum(1), jnp.float32)
+    y = x + jnp.asarray(rng.normal(0, 0.3, (8, 512)), jnp.float32)
+    d1, t_k = timed(lambda: ops.dtw(x, y, band=64))
+    d2, t_r = timed(lambda: ref.dtw_batch_ref(x, y, band=64))
+    err = float(jnp.max(jnp.abs(d1 - d2)))
+    rows.append(("dtw_pallas_8x512_band64", 1e6 * t_k, err))
+    rows.append(("dtw_ref_8x512_band64", 1e6 * t_r, err))
+
+    return rows, {"max_err": max(r[2] for r in rows)}

@@ -1,0 +1,54 @@
+"""Roofline table builder: aggregates the dry-run JSONs into the
+EXPERIMENTS.md Sec. Roofline table (per arch x shape x mesh: three terms,
+dominant bottleneck, MODEL_FLOPS ratio, memory fit)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Tuple
+
+DRYRUN_DIR = Path("results/dryrun")
+HBM_PER_CHIP = 16 * 2 ** 30  # v5e
+
+
+def load_cells(directory: Path = DRYRUN_DIR) -> List[dict]:
+    cells = []
+    for p in sorted(directory.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def table(cells: List[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | peak GiB/dev | fits | useful ratio |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for c in cells:
+        r, m = c["roofline"], c["memory"]
+        peak = m["peak_bytes_per_dev"] / 2 ** 30
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {peak:.2f} | {'Y' if peak * 2**30 <= HBM_PER_CHIP else 'N'} "
+            f"| {c['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> Tuple[List[tuple], dict]:
+    cells = load_cells()
+    rows = []
+    for c in cells:
+        r = c["roofline"]
+        dom_s = r[f"{r['dominant']}_s"]
+        rows.append((
+            f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}",
+            1e6 * dom_s,  # dominant term in us
+            c["useful_flops_ratio"],
+        ))
+    return rows, {"n_cells": len(cells), "table": table(cells)}
+
+
+if __name__ == "__main__":
+    print(table(load_cells()))

@@ -1,0 +1,44 @@
+"""Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One suite per paper table/figure (Fig. 5a-e), plus the kernel microbench,
+fleet-throughput scale-out, and the roofline aggregation over dry-run JSONs.
+Prints ``name,us_per_call,derived`` CSV; writes the machine-readable summary
+to results/bench_summary.json (EXPERIMENTS.md quotes it).
+"""
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import fig5_suite, fleet_scale, kernels_bench, roofline
+
+    all_rows = []
+    summaries = {}
+
+    for name, mod in (
+        ("fig5", fig5_suite), ("kernels", kernels_bench),
+        ("fleet", fleet_scale), ("roofline", roofline),
+    ):
+        try:
+            rows, summary = mod.run()
+        except FileNotFoundError as e:  # roofline needs dry-run outputs
+            print(f"# {name}: skipped ({e})", file=sys.stderr)
+            continue
+        all_rows.extend(rows)
+        summaries[name] = {k: v for k, v in summary.items() if k != "table"}
+
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    (out / "bench_summary.json").write_text(json.dumps(summaries, indent=2))
+    print(f"# summary -> {out / 'bench_summary.json'}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

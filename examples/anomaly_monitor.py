@@ -1,0 +1,65 @@
+"""SymED telemetry + straggler watchdog demo (paper Alg. 1 dogfooded).
+
+Simulates a 16-host training fleet emitting per-step wall times and losses;
+each host runs a SymED *sender* (O(1) state, numpy scalars), the coordinator
+*receives* one float per piece and (i) accounts the telemetry bandwidth
+saved, (ii) digitizes streams into symbols, (iii) flags the injected
+straggler and hang through the EWMA/EWMV z-score watchdog.
+
+Run:  PYTHONPATH=src python examples/anomaly_monitor.py
+"""
+import numpy as np
+
+from repro.core.symed import symbols_to_string
+from repro.train.telemetry import StepWatchdog, TelemetryHub
+
+
+def simulate():
+    rng = np.random.default_rng(3)
+    hub = TelemetryHub(tol=0.4, alpha=0.05)
+    dogs = {h: StepWatchdog(alpha=0.1, z_threshold=4.0) for h in range(16)}
+    events = []
+
+    for step in range(400):
+        for host in range(16):
+            dt = rng.normal(1.0, 0.03)
+            if host == 7 and 200 <= step < 220:     # injected slow host
+                dt += 0.8
+            if host == 3 and step == 350:           # injected hang
+                dt = 15.0
+            loss = 3.0 * np.exp(-step / 150) + rng.normal(0, 0.02)
+            hub.record_metrics(f"host{host:02d}", {"step_time": dt, "loss": loss})
+            ev = dogs[host].observe(step, dt)
+            if ev:
+                events.append((host, ev))
+    return hub, events
+
+
+def main():
+    hub, events = simulate()
+
+    report = hub.traffic_report()
+    raw = sum(r["raw_bytes"] for r in report.values())
+    wire = sum(r["wire_bytes"] for r in report.values())
+    print(f"telemetry streams     : {len(report)}")
+    print(f"raw bytes             : {raw:,}")
+    print(f"wire bytes            : {wire:,}  (CR={wire / raw:.3f}, "
+          f"paper avg 0.095)")
+
+    dig = hub.digitize("host07/step_time", k_max=8)
+    if dig is not None:
+        n = int(np.asarray(dig["state"].n))
+        s = symbols_to_string(np.asarray(dig["labels"]), n)
+        print(f"host07 step_time syms : {s}  (k={int(dig['k'])})")
+
+    print("\nwatchdog events:")
+    for host, ev in events:
+        print(f"  host{host:02d} step {ev['step']:3d}: {ev['kind']:9s} "
+              f"dt={ev['dt']:.2f}s z={ev['z']:.1f}")
+    flagged = {h for h, e in events}
+    assert 7 in flagged and 3 in flagged, "injected anomalies must be caught"
+    print("\ninjected straggler (host07) and hang (host03) both detected.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Checkpointing: atomic, zstd-compressed, reshard-on-restore."""
+from repro.ckpt.checkpoint import (
+    CheckpointManager, latest_step, restore_checkpoint, save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager", "latest_step", "restore_checkpoint", "save_checkpoint",
+]

@@ -1,0 +1,44 @@
+"""SymED core: the paper's contribution as composable JAX modules.
+
+Sender (Alg. 1): ``normalize`` (EWMA/EWMV) + ``compress`` (O(1) bridge error).
+Receiver (Alg. 2/3): ``receiver`` (wire -> pieces) + ``digitize`` (online
+k-means).  ``reconstruct``/``metrics`` close the loop; ``abba`` is the paper's
+offline baseline; ``symed`` wires everything end to end.
+"""
+from repro.core.abba import AbbaResult, abba_encode
+from repro.core.compress import (
+    CompressorState,
+    PieceEvent,
+    bridge_error_direct,
+    compress_stream,
+    compressor_finalize,
+    compressor_init,
+    compressor_step,
+)
+from repro.core.digitize import (
+    DigitizerState,
+    digitize_pieces,
+    digitizer_init,
+    digitizer_step,
+    masked_kmeans,
+    max_cluster_variance,
+    scale_coords,
+)
+from repro.core.metrics import (
+    compression_rate_abba,
+    compression_rate_symed,
+    drr,
+    dtw_ref,
+)
+from repro.core.normalize import EwmState, ewm_init, ewm_scan, ewm_step, standardize
+from repro.core.receiver import compact_events, pieces_from_wire
+from repro.core.reconstruct import (
+    inverse_compression,
+    inverse_digitization,
+    quantize_lengths,
+    reconstruct_from_pieces,
+    reconstruct_from_symbols,
+)
+from repro.core.symed import SymEDConfig, symbols_to_string, symed_batch, symed_encode
+
+__all__ = [k for k in dir() if not k.startswith("_")]

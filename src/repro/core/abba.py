@@ -1,0 +1,128 @@
+"""Offline ABBA baseline (Elsworth & Guettel 2020) -- the paper's comparator.
+
+ABBA = (global z-normalization) -> (greedy piecewise-linear compression)
+     -> (k-means digitization with tolerance-driven k search) -> symbols.
+
+We reuse the SymED sender machinery for segmentation: running it with
+``alpha=0`` on globally pre-normalized data freezes EWMV at 1.0, which makes
+the online error test *identical* to ABBA's offline criterion
+``SSE <= (len_ts - 2) * tol^2``.  Digitization is a deterministic offline
+k-search (quantile init + farthest-point growth), warm-started Lloyd.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import digitize as dg
+from repro.core.compress import compress_stream
+from repro.core.receiver import compact_events
+
+__all__ = ["AbbaResult", "abba_encode"]
+
+
+class AbbaResult(NamedTuple):
+    labels: jax.Array    # (n_max,) int32
+    centers: jax.Array   # (k_max, 2) in normalized piece space
+    k: jax.Array         # () int32
+    lengths: jax.Array   # (n_max,) int32 true piece lengths
+    incs: jax.Array      # (n_max,) f32 true (normalized-space) increments
+    n_pieces: jax.Array  # () int32
+    mean: jax.Array      # () f32 global normalization params
+    std: jax.Array       # () f32
+
+
+def _kmeans_growth(coords, mask, n, *, k_min, k_max, tol, lloyd_iters):
+    """Deterministic offline k-search: quantile seed, farthest-point growth."""
+    n_max, k_cap = coords.shape[0], k_max
+    bound = jnp.float32(tol) ** 2
+
+    # seed k_min centers at inc-quantiles of the active pieces
+    order = jnp.argsort(jnp.where(mask, coords[:, 1], _big()))
+    k0 = jnp.minimum(jnp.int32(k_min), n)
+
+    def seed(k):
+        # positions ~ evenly spaced over the first n sorted entries
+        pos = (jnp.arange(k_cap).astype(jnp.float32) + 0.5) * (
+            n.astype(jnp.float32) / jnp.maximum(k.astype(jnp.float32), 1.0)
+        )
+        idx = order[jnp.clip(pos.astype(jnp.int32), 0, n_max - 1)]
+        return coords[idx]
+
+    def run(c_init, k):
+        c, lab = dg.masked_kmeans(coords, mask, c_init, k, lloyd_iters)
+        err = dg.max_cluster_variance(coords, mask, c, lab, k)
+        return c, lab, err
+
+    c, lab, err = run(seed(k0), k0)
+    k_hi = jnp.minimum(jnp.minimum(jnp.int32(k_max), n), jnp.int32(coords.shape[0]))
+
+    def cond(carry):
+        k, _, _, err = carry
+        return (k < k_hi) & (err > bound)
+
+    def body(carry):
+        k, c, lab, _ = carry
+        # farthest-point growth: new center = active piece farthest from its center
+        d = jnp.sum((coords - c[lab]) ** 2, axis=1)
+        far = jnp.argmax(jnp.where(mask, d, -1.0))
+        c_new = jax.lax.dynamic_update_slice(c, coords[far][None, :], (k, 0))
+        k = k + 1
+        c2, lab2, err2 = run(c_new, k)
+        return k, c2, lab2, err2
+
+    k, c, lab, err = jax.lax.while_loop(cond, body, (k0, c, lab, err))
+    return c, lab, k
+
+
+def _big():
+    return jnp.float32(1e30)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_max", "len_max", "k_min", "k_max", "lloyd_iters")
+)
+def abba_encode(
+    ts: jax.Array,
+    *,
+    n_max: int = 512,
+    tol: float = 0.5,
+    scl: float = 1.0,
+    len_max: int = 512,
+    k_min: int = 3,
+    k_max: int = 100,
+    lloyd_iters: int = 20,
+) -> AbbaResult:
+    """Offline ABBA on a single stream ``(T,)`` (vmap for batches)."""
+    ts = jnp.asarray(ts, jnp.float32)
+    mean = jnp.mean(ts)
+    std = jnp.maximum(jnp.std(ts), 1e-12)
+    tn = (ts - mean) / std
+
+    # alpha=0 freezes EWMV at 1.0 -> exact offline ABBA segmentation criterion
+    events = compress_stream(tn, tol=tol, len_max=len_max, alpha=0.0)
+    wire = compact_events(events, n_max=n_max, t0=tn[0])
+
+    pieces = jnp.stack(
+        [wire["lengths"].astype(jnp.float32), wire["incs"]], axis=-1
+    )
+    mask = jnp.arange(n_max) < wire["n_pieces"]
+    _, coords = dg.scale_coords(pieces, mask, jnp.float32(scl))
+    c, lab, k = _kmeans_growth(
+        coords, mask, wire["n_pieces"],
+        k_min=k_min, k_max=k_max, tol=tol, lloyd_iters=lloyd_iters,
+    )
+    centers_raw, _ = dg._raw_centers(pieces, mask, lab, c.shape[0])
+    return AbbaResult(
+        labels=jnp.where(mask, lab, 0),
+        centers=centers_raw,
+        k=k,
+        lengths=wire["lengths"],
+        incs=wire["incs"],
+        n_pieces=wire["n_pieces"],
+        mean=mean,
+        std=std,
+    )

@@ -1,0 +1,301 @@
+"""SymED receiver: online digitization via warm-started k-means (paper Alg. 3).
+
+Pieces arrive one at a time.  All state lives in fixed-capacity masked buffers
+(XLA-friendly):
+
+  * ``pieces``  (n_max, 2)  raw-space (len, inc) tuples, ``n`` of them valid,
+  * ``labels``  (n_max,)    current cluster id per piece (labels of *old*
+                            pieces may change -- paper Sec. 4.2),
+  * ``centers`` (k_max, 2)  raw-space cluster centers, ``k`` of them active.
+
+Faithful semantics:
+  * identity labeling while fewer than ``k_min`` pieces exist (Alg. 3 line 2),
+  * clustering happens in standardized+scaled space: coords are
+    ``(scl * len/std(len), inc/std(inc))`` (ABBA's scl convention; scl=0
+    degenerates to 1D clustering on increments),
+  * warm start from previous centers with k = k_old; if the max within-cluster
+    variance still exceeds ``tol_s^2`` grow k, seeding the new center with the
+    newest piece first and random re-init only after that (Alg. 3 lines 10-17),
+  * ``GetTolS``: we use tol_s = tol in standardized space (documented heuristic;
+    the paper defers to ABBA's variance test).
+
+The inner distance/assign/update step is exactly what the Pallas
+``kmeans_assign`` kernel accelerates; ``repro.kernels.ops`` dispatches between
+this jnp reference and the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DigitizerState",
+    "digitizer_init",
+    "digitizer_step",
+    "digitize_pieces",
+    "masked_kmeans",
+    "max_cluster_variance",
+    "scale_coords",
+]
+
+_BIG = jnp.float32(1e30)
+
+
+class DigitizerState(NamedTuple):
+    pieces: jax.Array   # (n_max, 2) raw (len, inc); len stored as f32
+    n: jax.Array        # () int32 -- number of valid pieces
+    labels: jax.Array   # (n_max,) int32
+    centers: jax.Array  # (k_max, 2) raw space
+    k: jax.Array        # () int32 -- number of active centers
+    key: jax.Array      # PRNG key for the (rare) random re-init path
+
+
+def digitizer_init(n_max: int, k_max: int, key: jax.Array) -> DigitizerState:
+    return DigitizerState(
+        pieces=jnp.zeros((n_max, 2), jnp.float32),
+        n=jnp.zeros((), jnp.int32),
+        labels=jnp.zeros((n_max,), jnp.int32),
+        centers=jnp.zeros((k_max, 2), jnp.float32),
+        k=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def scale_coords(
+    pieces: jax.Array, mask: jax.Array, scl: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """ABBA standardization of piece space.
+
+    Returns (scales, coords): ``coords = pieces * scales`` with
+    ``scales = (scl/std(len), 1/std(inc))`` over the active pieces.
+    No mean removal (increments keep sign semantics, as in ABBA).
+    """
+    cnt = jnp.maximum(jnp.sum(mask), 1).astype(jnp.float32)
+    m = mask[:, None].astype(jnp.float32)
+    mean = jnp.sum(pieces * m, axis=0) / cnt
+    var = jnp.sum((pieces - mean) ** 2 * m, axis=0) / cnt
+    std = jnp.sqrt(var)
+    std = jnp.where(std < 1e-12, 1.0, std)
+    scales = jnp.stack([scl / std[0], 1.0 / std[1]])
+    return scales, pieces * scales
+
+
+def masked_kmeans(
+    coords: jax.Array,
+    mask: jax.Array,
+    c_init: jax.Array,
+    k: jax.Array,
+    iters: int = 10,
+) -> Tuple[jax.Array, jax.Array]:
+    """Lloyd iterations over masked pieces/centers.
+
+    Args:
+      coords: (n_max, 2) scaled piece coordinates.
+      mask:   (n_max,) bool -- valid pieces.
+      c_init: (k_max, 2) initial centers (rows >= k are ignored).
+      k:      () int32 active center count.
+
+    Returns (centers, labels): empty clusters keep their previous position.
+    """
+    k_max = c_init.shape[0]
+    center_active = jnp.arange(k_max) < k
+
+    def lloyd(_, carry):
+        centers, _ = carry
+        d = _pairwise_sq_dists(coords, centers)
+        d = jnp.where(center_active[None, :], d, _BIG)
+        labels = jnp.argmin(d, axis=1).astype(jnp.int32)
+        onehot = jax.nn.one_hot(labels, k_max, dtype=jnp.float32)
+        onehot = onehot * mask[:, None].astype(jnp.float32)
+        counts = jnp.sum(onehot, axis=0)                      # (k_max,)
+        sums = onehot.T @ coords                              # (k_max, 2)
+        new_centers = jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centers
+        )
+        return new_centers, labels
+
+    centers, labels = jax.lax.fori_loop(
+        0, iters, lloyd, (c_init, jnp.zeros(coords.shape[0], jnp.int32))
+    )
+    return centers, labels
+
+
+def _pairwise_sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    """||x_i - c_j||^2 via the MXU-friendly expansion (matches the kernel)."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)         # (n, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]               # (1, k)
+    cross = x @ c.T                                    # (n, k) -- MXU food
+    return jnp.maximum(x2 - 2.0 * cross + c2, 0.0)
+
+
+def max_cluster_variance(
+    coords: jax.Array,
+    mask: jax.Array,
+    centers: jax.Array,
+    labels: jax.Array,
+    k: jax.Array,
+) -> jax.Array:
+    """max_c  sum_{p in c} ||p - center_c||^2 / max(|c| - 1, 1).
+
+    Sample variance per cluster (singletons score 0), maximized over active
+    clusters -- the paper's MAXCLUSTERVARIANCE tolerance test.
+    """
+    k_max = centers.shape[0]
+    onehot = jax.nn.one_hot(labels, k_max, dtype=jnp.float32)
+    onehot = onehot * mask[:, None].astype(jnp.float32)
+    sq = jnp.sum((coords[:, None, :] - centers[None, :, :]) ** 2, axis=-1)  # (n,k)
+    per_cluster = jnp.sum(sq * onehot, axis=0)  # (k_max,)
+    counts = jnp.sum(onehot, axis=0)
+    var = per_cluster / jnp.maximum(counts - 1.0, 1.0)
+    active = (jnp.arange(k_max) < k) & (counts > 0)
+    return jnp.max(jnp.where(active, var, 0.0))
+
+
+def _raw_centers(
+    pieces: jax.Array, mask: jax.Array, labels: jax.Array, k_max: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-cluster means of the *raw* pieces (de-standardization; also the
+    right answer for scl=0 where the scaled len coordinate is degenerate)."""
+    onehot = jax.nn.one_hot(labels, k_max, dtype=jnp.float32)
+    onehot = onehot * mask[:, None].astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ pieces
+    return sums / jnp.maximum(counts[:, None], 1.0), counts
+
+
+def digitizer_step(
+    state: DigitizerState,
+    piece: jax.Array,
+    *,
+    tol: float,
+    scl: float,
+    k_min: int,
+    k_max_active: int,
+    lloyd_iters: int = 10,
+) -> Tuple[DigitizerState, jax.Array]:
+    """Ingest one (len, inc) piece; return updated state + newest symbol id."""
+    n_max, k_cap = state.pieces.shape[0], state.centers.shape[0]
+    piece = jnp.asarray(piece, jnp.float32)
+
+    pieces = jax.lax.dynamic_update_slice(state.pieces, piece[None, :], (state.n, 0))
+    n = state.n + 1
+    mask = jnp.arange(n_max) < n
+
+    # --- trivial phase (Alg. 3 line 2): every piece its own cluster --------
+    def trivial(key):
+        labels = jnp.where(mask, jnp.arange(n_max), 0).astype(jnp.int32)
+        m = min(k_cap, n_max)  # static
+        centers = jnp.zeros((k_cap, 2), jnp.float32)
+        centers = centers.at[:m].set(jnp.where(mask[:m, None], pieces[:m], 0.0))
+        return DigitizerState(pieces, n, labels, centers, n, key)
+
+    # --- clustering phase ---------------------------------------------------
+    def cluster(key):
+        scl_arr = jnp.asarray(scl, jnp.float32)
+        scales, coords = scale_coords(pieces, mask, scl_arr)
+        c_scaled = state.centers * scales[None, :]
+        bound = jnp.asarray(tol, jnp.float32) ** 2
+        k_hi = jnp.minimum(jnp.asarray(k_max_active, jnp.int32), n)
+        k_o = jnp.maximum(state.k, 1)
+
+        def run(c_init, k):
+            c, lab = masked_kmeans(coords, mask, c_init, k, lloyd_iters)
+            err = max_cluster_variance(coords, mask, c, lab, k)
+            return c, lab, err
+
+        c0, lab0, err0 = run(c_scaled, k_o)
+
+        def cond(carry):
+            k, _, _, err, _ = carry
+            return (k < k_hi) & (err > bound)
+
+        def body(carry):
+            k, c, lab, err, key = carry
+            k_new = k + 1
+            key, sub = jax.random.split(key)
+
+            # k_old + 1: seed the extra center with the newest piece
+            newest = coords[n - 1]
+            seeded = jax.lax.dynamic_update_slice(c, newest[None, :], (k, 0))
+
+            # beyond that: random re-init from active pieces
+            probs = mask.astype(jnp.float32) / jnp.maximum(jnp.sum(mask), 1)
+            idx = jax.random.choice(sub, n_max, shape=(k_cap,), replace=False, p=probs)
+            randomed = coords[idx]
+
+            c_init = jnp.where(k_new == k_o + 1, seeded, randomed)
+            c2, lab2, err2 = run(c_init, k_new)
+            return k_new, c2, lab2, err2, key
+
+        k_fin, c_fin, lab_fin, _, key = jax.lax.while_loop(
+            cond, body, (k_o, c0, lab0, err0, key)
+        )
+        centers_raw, _ = _raw_centers(pieces, mask, lab_fin, k_cap)
+        # keep previous raw position for (rare) empty active clusters
+        return DigitizerState(pieces, n, lab_fin, centers_raw, k_fin, key)
+
+    new_state = jax.lax.cond(n <= k_min, trivial, cluster, state.key)
+    symbol = new_state.labels[n - 1]
+    return new_state, symbol
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_cap", "k_min", "k_max_active", "lloyd_iters", "use_kernel"),
+)
+def digitize_pieces(
+    lengths: jax.Array,
+    incs: jax.Array,
+    n_pieces: jax.Array,
+    key: jax.Array,
+    *,
+    k_cap: int = 100,
+    tol: float = 0.5,
+    scl: float = 1.0,
+    k_min: int = 3,
+    k_max_active: int = 100,
+    lloyd_iters: int = 10,
+    use_kernel: bool = False,  # reserved: kernels.ops dispatch happens above us
+) -> dict:
+    """Run the receiver over a padded piece sequence (single stream).
+
+    Args:
+      lengths/incs: (n_max,) padded piece arrays (receiver-reconstructed).
+      n_pieces: () int32 number of valid pieces.
+
+    Returns dict with final ``labels``/``centers``/``k`` plus the per-step
+    symbol emission ``symbols`` (n_max,) (symbol assigned when each piece
+    arrived; later steps may relabel earlier pieces -- final labeling is
+    ``labels``).
+    """
+    n_max = lengths.shape[0]
+    k_cap = int(k_cap)
+    state = digitizer_init(n_max, k_cap, key)
+    pieces = jnp.stack([lengths.astype(jnp.float32), incs.astype(jnp.float32)], axis=-1)
+
+    def step(state, xs):
+        piece, idx = xs
+        live = idx < n_pieces
+
+        def do(s):
+            return digitizer_step(
+                s, piece, tol=tol, scl=scl, k_min=k_min,
+                k_max_active=k_max_active, lloyd_iters=lloyd_iters,
+            )
+
+        def skip(s):
+            return s, jnp.zeros((), jnp.int32)
+
+        return jax.lax.cond(live, do, skip, state)
+
+    final, symbols = jax.lax.scan(step, state, (pieces, jnp.arange(n_max)))
+    return {
+        "labels": final.labels,
+        "centers": final.centers,
+        "k": final.k,
+        "symbols": symbols,
+        "state": final,
+    }

@@ -1,0 +1,92 @@
+"""SymED wire format + receiver-side piece construction (paper Alg. 2).
+
+The sender transmits one raw float per finished piece (the segment endpoint)
+plus a one-off 4-byte "hello" carrying t0.  The receiver reconstructs each
+piece locally:
+
+  * ``inc_i = e_i - e_{i-1}``  (with ``e_{-1} = t0``),
+  * ``len_i`` from *arrival times*: in the fleet simulator the ingest clock is
+    the stream step index, so ``len_i = step_i - step_{i-1}`` (with the
+    convention ``step_{-1} = 1`` -- the first piece starts at t0, and a piece
+    emitted while processing step j ends at point j-1).
+
+``compact_events`` turns the sender's per-step event arrays into padded
+per-piece buffers -- this is the scatter that model the sender->receiver wire.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compact_events", "pieces_from_wire"]
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def compact_events(events: dict, *, n_max: int, t0: jax.Array) -> dict:
+    """Compact per-step emission events into padded per-piece arrays.
+
+    Args:
+      events: output of ``compress_stream`` for a single stream: ``emit``
+        (T,) bool, ``endpoint`` (T,) f32, ``tail`` PieceEvent, ...
+      n_max: static per-piece buffer capacity.
+      t0: first raw stream point (the "hello" payload).
+
+    Returns dict: ``endpoints`` (n_max,) f32, ``steps`` (n_max,) i32 emission
+    step of each piece, ``lengths`` (n_max,) i32, ``incs`` (n_max,) f32,
+    ``n_pieces`` () i32, ``t0``.
+
+    Lengths/incs are the *receiver's* reconstruction (arrival-gap based); they
+    equal the sender-side ground truth exactly (tested).
+    """
+    emit = events["emit"]
+    t_len = emit.shape[-1]
+    pos = jnp.cumsum(emit.astype(jnp.int32)) - 1          # piece slot per step
+    slot = jnp.where(emit, pos, n_max)                    # OOB rows dropped
+
+    endpoints = jnp.zeros((n_max,), jnp.float32).at[slot].set(
+        events["endpoint"], mode="drop"
+    )
+    steps = jnp.zeros((n_max,), jnp.int32).at[slot].set(
+        jnp.arange(t_len, dtype=jnp.int32), mode="drop"
+    )
+    n_emitted = jnp.minimum(jnp.sum(emit.astype(jnp.int32)), n_max)
+
+    # trailing flush: the open segment [seg_start .. t_{T-1}] as a final piece,
+    # conceptually emitted "at step T"
+    tail = events["tail"]
+    endpoints = jnp.where(
+        jnp.arange(n_max) == n_emitted,
+        jnp.where(tail.emit, tail.endpoint, endpoints[jnp.minimum(n_emitted, n_max - 1)]),
+        endpoints,
+    )
+    steps = jnp.where(
+        jnp.arange(n_max) == n_emitted,
+        jnp.where(tail.emit, t_len, steps[jnp.minimum(n_emitted, n_max - 1)]),
+        steps,
+    )
+    n_pieces = jnp.minimum(n_emitted + tail.emit.astype(jnp.int32), n_max)
+
+    lens, incs = pieces_from_wire(endpoints, steps, n_pieces, t0)
+    return {
+        "endpoints": endpoints,
+        "steps": steps,
+        "lengths": lens,
+        "incs": incs,
+        "n_pieces": n_pieces,
+        "t0": t0,
+    }
+
+
+def pieces_from_wire(
+    endpoints: jax.Array, steps: jax.Array, n_pieces: jax.Array, t0: jax.Array
+):
+    """Alg. 2 lines 5-7: build (len, inc) from consecutive arrivals."""
+    n_max = endpoints.shape[0]
+    live = jnp.arange(n_max) < n_pieces
+    prev_e = jnp.concatenate([jnp.asarray(t0, jnp.float32)[None], endpoints[:-1]])
+    prev_s = jnp.concatenate([jnp.ones((1,), jnp.int32), steps[:-1]])
+    lens = jnp.where(live, steps - prev_s, 0).astype(jnp.int32)
+    incs = jnp.where(live, endpoints - prev_e, 0.0)
+    return lens, incs

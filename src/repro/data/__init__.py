@@ -1,0 +1,9 @@
+"""Data substrate: synthetic UCR-like streams, SymED tokenizer, pipeline."""
+from repro.data.pipeline import SymbolPipeline, TokenBatcher
+from repro.data.synthetic import FAMILIES, make_dataset, make_fleet
+from repro.data.tokenizer import SymbolTokenizer
+
+__all__ = [
+    "FAMILIES", "make_dataset", "make_fleet", "SymbolTokenizer",
+    "SymbolPipeline", "TokenBatcher",
+]

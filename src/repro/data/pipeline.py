@@ -1,0 +1,83 @@
+"""Streaming pipeline: raw fleets -> SymED symbols -> packed token batches.
+
+``SymbolPipeline`` runs the batched SymED encoder (vmapped sender+receiver)
+over fleet slabs and feeds a background-prefetched ``TokenBatcher`` --
+the framework's input path for training sequence models on symbolized
+sensor data.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.core.symed import SymEDConfig, symed_batch
+from repro.data.synthetic import make_fleet
+from repro.data.tokenizer import SymbolTokenizer
+
+__all__ = ["SymbolPipeline", "TokenBatcher"]
+
+
+class SymbolPipeline:
+    """Symbolize fleet slabs on demand."""
+
+    def __init__(self, cfg: SymEDConfig, tokenizer: SymbolTokenizer,
+                 stream_len: int = 1024, slab: int = 64, seed: int = 0):
+        self.cfg = cfg
+        self.tok = tokenizer
+        self.stream_len = stream_len
+        self.slab = slab
+        self.seed = seed
+
+    def slabs(self) -> Iterator[np.ndarray]:
+        i = 0
+        while True:
+            yield make_fleet(self.slab, self.stream_len, seed=self.seed + i)
+            i += 1
+
+    def docs(self) -> Iterator[list]:
+        key = jax.random.key(self.seed)
+        for slab in self.slabs():
+            key, sub = jax.random.split(key)
+            out = symed_batch(slab, self.cfg, sub, reconstruct=False)
+            labels = np.asarray(out["symbols"])
+            lens = np.asarray(out["pieces_len"])
+            n_pieces = np.asarray(out["n_pieces"])
+            for b in range(slab.shape[0]):
+                yield self.tok.encode(labels[b], n_pieces[b], lens[b])
+
+
+class TokenBatcher:
+    """Background-prefetched (batch, seq) int32 batches."""
+
+    def __init__(self, pipeline: SymbolPipeline, batch: int, seq_len: int,
+                 prefetch: int = 4):
+        self.pipeline = pipeline
+        self.batch = batch
+        self.seq_len = seq_len
+        self._q: "queue.Queue[np.ndarray]" = queue.Queue(maxsize=prefetch)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def _worker(self):
+        rows = []
+        for doc in self.pipeline.docs():
+            if self._stop.is_set():
+                return
+            rows.append(doc)
+            packed = self.pipeline.tok.pack(rows, self.seq_len)
+            if packed.shape[0] >= self.batch:
+                self._q.put(packed[: self.batch])
+                rows = []
+
+    def __iter__(self):
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        while True:
+            yield self._q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for SymED's compute hot spots.
+
+  * ``ewma``   -- blocked EWMA/EWMV linear-recurrence scan (sender, Eq. 1-2)
+  * ``kmeans`` -- fused assign+stats Lloyd half-step (receiver, Alg. 3)
+  * ``dtw``    -- banded anti-diagonal DTW (evaluation metric)
+
+``ops`` holds the jit'd public wrappers (interpret-mode on CPU); ``ref`` the
+pure-jnp oracles the tests assert against.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.dtw import dtw_pallas
+from repro.kernels.ewma import ewma_scan_pallas
+from repro.kernels.kmeans import kmeans_assign_pallas
+
+__all__ = ["ops", "ref", "dtw_pallas", "ewma_scan_pallas", "kmeans_assign_pallas"]

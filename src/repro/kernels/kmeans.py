@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fused k-means assign + cluster statistics.
+
+One Lloyd half-step for a *batch of independent clustering problems* (SymED
+receivers each own one): pairwise squared distances via the MXU-friendly
+expansion ``|x|^2 - 2 x.c^T + |c|^2``, masked argmin, and the per-cluster
+(sum, count) statistics needed for the center update -- all fused so the
+(N, K) distance matrix never leaves VMEM.
+
+Layout: grid = (streams, N tiles).  Centers for the current stream stay
+resident; partial sums/counts accumulate directly in the output block (its
+index map is constant over the N-tile axis, so Pallas keeps it in VMEM and
+writes back once).  Feature dim D is padded to the 128-lane tile by the
+wrapper; SymED's piece space is D=2 but the kernel is written for general D
+(the benchmark sweeps D to show MXU utilization).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["kmeans_assign_pallas"]
+
+_BIG = 1e30  # plain Python float: jnp constants would be captured by the kernel
+
+
+def _kernel(x_ref, m_ref, c_ref, act_ref, lab_ref, sums_ref, cnt_ref):
+    jt = pl.program_id(1)
+    x = x_ref[0]          # (bn, D)
+    m = m_ref[0]          # (bn,)   1.0 valid / 0.0 padded piece
+    c = c_ref[0]          # (K, D)
+    act = act_ref[0]      # (K,)    1.0 active center / 0.0 inactive
+
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)                     # (bn, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]                           # (1, K)
+    cross = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                              # (bn, K) MXU
+    d = jnp.maximum(x2 - 2.0 * cross + c2, 0.0)
+    d = jnp.where(act[None, :] > 0.0, d, _BIG)
+
+    labels = jnp.argmin(d, axis=1).astype(jnp.int32)               # (bn,)
+    lab_ref[0] = jnp.where(m > 0.0, labels, 0)
+
+    k = c.shape[0]
+    onehot = (
+        labels[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    ).astype(jnp.float32) * m[:, None]                             # (bn, K)
+
+    p_sums = jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                              # (K, D) MXU
+    p_cnt = jnp.sum(onehot, axis=0)                                # (K,)
+
+    @pl.when(jt == 0)
+    def _():
+        sums_ref[0] = jnp.zeros_like(sums_ref[0])
+        cnt_ref[0] = jnp.zeros_like(cnt_ref[0])
+
+    sums_ref[0] += p_sums
+    cnt_ref[0] += p_cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_pallas(
+    x: jax.Array,
+    mask: jax.Array,
+    centers: jax.Array,
+    center_active: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Fused assign + stats for batched k-means.
+
+    Args:
+      x: (S, N, D) points.  mask: (S, N) validity.
+      centers: (S, K, D).  center_active: (S, K) validity.
+
+    Returns:
+      labels (S, N) i32, sums (S, K, D) f32, counts (S, K) f32 --
+      ``new_centers = sums / max(counts, 1)`` where counts > 0.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    s, n, d = x.shape
+    k = centers.shape[1]
+
+    dp = _round_up(d, 128)
+    kp = _round_up(k, 128)
+    bn = min(block_n, _round_up(n, 8))
+    np_ = _round_up(n, bn)
+
+    x_p = jnp.pad(x, ((0, 0), (0, np_ - n), (0, dp - d)))
+    m_p = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    c_p = jnp.pad(jnp.asarray(centers, jnp.float32), ((0, 0), (0, kp - k), (0, dp - d)))
+    a_p = jnp.pad(center_active.astype(jnp.float32), ((0, 0), (0, kp - k)))
+
+    grid = (s, np_ // bn)
+    labels, sums, counts = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, kp, dp), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, kp), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, kp, dp), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, kp), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, np_), jnp.int32),
+            jax.ShapeDtypeStruct((s, kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((s, kp), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        interpret=interpret,
+    )(x_p, m_p, c_p, a_p)
+    return labels[:, :n], sums[:, :k, :d], counts[:, :k]
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m

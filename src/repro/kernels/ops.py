@@ -1,0 +1,46 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Dispatch policy: on TPU the compiled kernels run natively; on CPU (this
+container) they execute under ``interpret=True`` -- the kernel *body* runs in
+Python/XLA-CPU, which validates BlockSpec indexing and kernel semantics without
+TPU hardware.  ``force_ref=True`` routes to the pure-jnp oracle (used by small
+host-side paths where kernel launch overhead would dominate).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dtw import dtw_pallas
+from repro.kernels.ewma import ewma_scan_pallas
+from repro.kernels.kmeans import kmeans_assign_pallas
+
+__all__ = ["ewma_scan", "kmeans_assign", "dtw", "on_cpu"]
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ewma_scan(ts: jax.Array, alpha, *, force_ref: bool = False):
+    """Batched EWMA/EWMV (B, T) -> (means, vars)."""
+    if force_ref:
+        return ref.ewma_scan_ref(ts, alpha)
+    return ewma_scan_pallas(ts, alpha, interpret=on_cpu())
+
+
+def kmeans_assign(x, mask, centers, center_active, *, force_ref: bool = False):
+    """One fused Lloyd assign+stats step: see ``kmeans_assign_pallas``."""
+    if force_ref:
+        return ref.kmeans_assign_ref(x, mask, centers, center_active)
+    return kmeans_assign_pallas(x, mask, centers, center_active, interpret=on_cpu())
+
+
+def dtw(x, y, band: int | None = None, *, force_ref: bool = False):
+    """Batched banded DTW distances (B, N) x (B, N) -> (B,)."""
+    if force_ref:
+        return ref.dtw_batch_ref(x, y, band)
+    return dtw_pallas(x, y, band, interpret=on_cpu())

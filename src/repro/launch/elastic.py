@@ -1,0 +1,49 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+Policy: keep the ``model`` axis intact (tensor-parallel groups must be whole
+-- losing one chip kills its TP group), shrink the ``data``/``pod`` axes to
+the largest full multiple that survives, then restore the latest checkpoint
+with the new mesh's shardings (``repro.ckpt`` stores leaves unsharded, so
+restore *is* the reshard).
+
+This is the single-process emulation of the production flow:
+  watchdog flags dead pod -> controller drops its hosts -> remaining hosts
+  re-init jax.distributed with the shrunken topology -> ``elastic_mesh`` ->
+  ``CheckpointManager.restore_latest(..., shardings=new)`` -> resume.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from repro.launch.mesh import make_test_mesh
+
+__all__ = ["elastic_mesh", "resume_on_mesh"]
+
+
+def elastic_mesh(model_size: int, *, devices: Optional[Sequence] = None):
+    """Largest (data, model) mesh fitting the surviving devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < model_size:
+        raise RuntimeError(
+            f"{len(devices)} devices cannot host a model axis of {model_size}")
+    data = len(devices) // model_size
+    n = data * model_size
+    return jax.make_mesh(
+        (data, model_size), ("data", "model"), devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def resume_on_mesh(ckpt_dir, abstract_state, mesh):
+    """Restore the latest checkpoint resharded onto ``mesh``."""
+    from repro.ckpt import CheckpointManager
+    from repro.launch.specs import state_shardings
+
+    mgr = CheckpointManager(ckpt_dir)
+    shardings = state_shardings(abstract_state, mesh)
+    state, manifest = mgr.restore_latest(abstract_state, shardings=shardings)
+    if state is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    return state, manifest

@@ -1,0 +1,174 @@
+"""``input_specs``: weak-type-correct ShapeDtypeStruct stand-ins + shardings
+for every (arch x shape) dry-run cell.  No device allocation anywhere --
+states come from ``jax.eval_shape`` over the real constructors, so the specs
+can never drift from the model code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.models import init_decode_state, param_shapes
+from repro.sharding.partition import _path_str, logical_to_spec, param_specs
+from repro.train.optimizer import OptConfig, opt_init
+from repro.train.steps import init_train_state
+
+__all__ = [
+    "train_batch_specs", "decode_state_specs", "abstract_train_state",
+    "abstract_decode_state", "batch_shardings", "state_shardings", "input_specs",
+]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.frontend == "patches":
+        batch["prefix_embeds"] = _sds((b, cfg.num_prefix_embeds, cfg.d_model), cfg.dtype)
+    elif cfg.frontend == "frames":
+        batch["enc_frames"] = _sds((b, cfg.num_prefix_embeds, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def abstract_train_state(cfg: ModelConfig, oc: OptConfig):
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.key(0), cfg, oc)
+    )
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch, mesh: Mesh):
+    def spec(path, leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, logical_to_spec(logical, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+_DECODE_RULES = {
+    # KVCache leaves: (..., B, C, kv, hd) -- kv heads shard when divisible,
+    # else head_dim (flash-decoding-style splits stay available via kv_seq)
+    "k": ("batch", None, "kv_heads", "head_dim"),
+    "v": ("batch", None, "kv_heads", "head_dim"),
+    "k_q": ("batch", None, "kv_heads", "head_dim"),
+    "v_q": ("batch", None, "kv_heads", "head_dim"),
+    "k_s": ("batch", None, "kv_heads", None),
+    "v_s": ("batch", None, "kv_heads", None),
+    # mamba
+    "h": ("batch", "ssm_inner", None),
+    "conv_buf": ("batch", None, "ssm_inner"),
+    # xlstm
+    "c": ("batch", "heads", None, None),
+    "n": ("batch", "heads", None),
+    "m": ("batch", "heads"),
+    "enc_mem": ("batch", None, None),
+    "pos": (),
+}
+
+_DECODE_RULES_BY_RANK = {  # (name, rank) overrides (slstm c/n are rank 3)
+    ("c", 3): ("batch", "heads", None),
+}
+
+
+def decode_state_specs(state, mesh: Mesh):
+    def spec(path, leaf):
+        name = None
+        for part in reversed(_path_str(path).split("/")):
+            if not part.isdigit():
+                name = part
+                break
+        logical = _DECODE_RULES_BY_RANK.get((name, len(leaf.shape)))
+        if logical is None:
+            logical = _DECODE_RULES.get(name)
+        if logical is None:
+            return NamedSharding(mesh, P())
+        pad = (None,) * (len(leaf.shape) - len(logical))
+        return NamedSharding(
+            mesh, logical_to_spec(pad + tuple(logical), leaf.shape, mesh)
+        )
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def state_shardings(state, mesh: Mesh):
+    """Train-state shardings: params/opt via the param partitioner."""
+    def spec(path, leaf):
+        p = _path_str(path)
+        from repro.sharding.partition import spec_for_path
+
+        return NamedSharding(mesh, spec_for_path(p, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly
+# ---------------------------------------------------------------------------
+
+def default_accum_steps(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Gradient-accumulation policy: keep per-microbatch activations HBM-sized."""
+    if shape.step != "train":
+        return 1
+    n = cfg.param_count()
+    if n > 1e11:
+        return 8
+    if n > 2e10:
+        return 4
+    return 1
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, oc: Optional[OptConfig] = None):
+    """Abstract inputs for one dry-run cell.
+
+    Returns dict with ``kind`` (train|prefill|decode), ``args`` (pytree of
+    ShapeDtypeStructs matching the step function signature) and a
+    ``shardings(mesh)`` callable producing matching NamedShardings.
+    """
+    shape = SHAPES[shape_name]
+    oc = oc or OptConfig(moments_dtype="bfloat16" if cfg.param_count() > 3e10 else "float32")
+
+    if shape.step == "train":
+        state = abstract_train_state(cfg, oc)
+        batch = train_batch_specs(cfg, shape)
+
+        def shardings(mesh):
+            return (state_shardings(state, mesh), batch_shardings(batch, mesh))
+
+        return {"kind": "train", "args": (state, batch), "shardings": shardings,
+                "opt_config": oc, "accum_steps": default_accum_steps(cfg, shape)}
+
+    if shape.step == "prefill":
+        batch = train_batch_specs(cfg, shape)
+        tokens = batch.pop("tokens")
+        args = (tokens, batch)
+
+        def shardings(mesh):
+            return (batch_shardings(tokens, mesh), batch_shardings(batch, mesh))
+
+        return {"kind": "prefill", "args": args, "shardings": shardings,
+                "opt_config": oc}
+
+    # decode: one new token against a seq_len cache
+    state = abstract_decode_state(cfg, shape.global_batch, shape.seq_len)
+    token = _sds((shape.global_batch, 1), jnp.int32)
+
+    def shardings(mesh):
+        return (decode_state_specs(state, mesh), batch_shardings(token, mesh))
+
+    return {"kind": "decode", "args": (state, token), "shardings": shardings,
+            "opt_config": oc}

@@ -1,0 +1,15 @@
+"""Model zoo substrate: layers, attention, MoE, SSM, xLSTM, assembly."""
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.params import count_params, param_shapes
+
+__all__ = [
+    "decode_step", "forward", "init_decode_state", "init_params", "loss_fn",
+    "prefill", "count_params", "param_shapes",
+]

@@ -1,0 +1,304 @@
+"""Attention: blockwise online-softmax training path + cached decode path.
+
+Training/prefill uses a flash-style blockwise formulation (lax.scan over KV
+chunks carrying running (max, denom, acc)) so the (S, S) score matrix is never
+materialized -- on TPU this is the memory-capacity play that makes the 32k
+prefill shapes fit HBM.  Masks supported: causal, sliding-window (local),
+bidirectional prefix (prefix-LM for the VLM), and full-bidirectional
+(whisper encoder) -- all computed from absolute positions inside the chunk
+loop.
+
+Decode uses KV caches: ``global`` layers keep the full (S_max) cache; ``local``
+layers keep a ring buffer of ``window`` slots (RoPE is applied pre-cache at
+absolute positions, so ring rotation is sound).  This bounded-cache path is
+what makes sliding-window archs legitimately sub-quadratic for ``long_500k``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, model_dtype, rope
+
+__all__ = [
+    "attn_init", "attn_apply_train", "KVCache", "init_kv_cache",
+    "attn_apply_decode",
+]
+
+_NEG = -1e30
+
+
+def attn_init(key, cfg) -> dict:
+    dt = model_dtype(cfg)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, h * hd, dt),
+        "wk": init_dense(ks[1], d, kv * hd, dt),
+        "wv": init_dense(ks[2], d, kv * hd, dt),
+        "wo": init_dense(ks[3], h * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(x, params["wq"], params.get("bq")).reshape(b, s, h, hd)
+    k = dense(x, params["wk"], params.get("bk")).reshape(b, s, kv, hd)
+    v = dense(x, params["wv"], params.get("bv")).reshape(b, s, kv, hd)
+    if cfg.pos_kind == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(qpos, kpos, *, mode: str, window: int, prefix: int):
+    """(..., q, k) boolean validity from absolute positions."""
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    if mode == "bidir":
+        return jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    causal = kp <= qp
+    if mode == "local":
+        causal &= (qp - kp) < window
+    if prefix > 0:  # prefix-LM: fully visible prefix block
+        causal |= (qp < prefix) & (kp < prefix)
+    return causal
+
+
+def _blockwise_sdpa(q, k, v, *, mode, window, prefix, q0, k0, chunk_q, chunk_kv, group):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Kv, hd); H = Kv * group.
+    q0/k0: absolute position offsets of q/k element 0.
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    cq = min(chunk_q, sq)
+    ck = min(chunk_kv, sk)
+    if sq % cq:
+        cq = sq  # non-power-of-two smoke shapes: single chunk
+    if sk % ck:
+        ck = sk
+    nq, nk = sq // cq, sk // ck
+    scale = hd ** -0.5
+
+    qr = q.reshape(b, nq, cq, kvh, group, hd)
+    kr = k.reshape(b, nk, ck, kvh, hd)
+    vr = v.reshape(b, nk, ck, kvh, hd)
+
+    def per_q_chunk(qi, qc):
+        # qc: (B, cq, Kv, G, hd)
+        qpos = q0 + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, xs):
+            m_run, l_run, acc = carry
+            ki, kc, vc = xs
+            kpos = k0 + ki * ck + jnp.arange(ck)
+            s = jnp.einsum(
+                "bqkgh,bskh->bkgqs", qc, kc, preferred_element_type=jnp.float32
+            ) * scale                                   # (B, Kv, G, cq, ck)
+            valid = _mask(qpos, kpos, mode=mode, window=window, prefix=prefix)
+            s = jnp.where(valid[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, group, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, group, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, group, cq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)),
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]   # (B, Kv, G, cq, hd)
+        return jnp.moveaxis(out, 3, 1)                   # (B, cq, Kv, G, hd)
+
+    # checkpoint each q-chunk: backward recomputes the kv scan instead of
+    # storing (m, l, acc) residuals for every kv step -- the memory play that
+    # keeps 32k prefill inside HBM.
+    outs = jax.lax.map(
+        jax.checkpoint(lambda xs: per_q_chunk(xs[0], xs[1])),
+        (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)),
+    )                                                    # (nq, B, cq, Kv, G, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attn_apply_train(
+    params: dict,
+    cfg,
+    x: jax.Array,
+    *,
+    attn_type: str = "global",
+    mode_override: Optional[str] = None,
+    kv_memory: Optional[jax.Array] = None,
+    pos0: int = 0,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    ``kv_memory``: if given (B, S_enc, d), keys/values come from it
+    (cross-attention) and the mask is bidirectional.  Returns
+    ``(out, (k, v) if return_kv else None)``.
+    """
+    b, s, _ = x.shape
+    positions = pos0 + jnp.arange(s)[None, :]
+    group = cfg.n_heads // cfg.n_kv_heads
+
+    if kv_memory is not None:
+        sm = kv_memory.shape[1]
+        mpos = jnp.arange(sm)[None, :]
+        q = dense(x, params["wq"], params.get("bq")).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = dense(kv_memory, params["wk"], params.get("bk")).reshape(b, sm, cfg.n_kv_heads, cfg.head_dim)
+        v = dense(kv_memory, params["wv"], params.get("bv")).reshape(b, sm, cfg.n_kv_heads, cfg.head_dim)
+        del mpos
+        mode = "bidir"
+        k0 = 0
+    else:
+        q, k, v = _project_qkv(params, cfg, x, positions)
+        mode = mode_override or ("local" if attn_type == "local" else "causal")
+        k0 = pos0
+
+    out = _blockwise_sdpa(
+        q, k, v, mode=mode, window=cfg.window, prefix=cfg.prefix_lm,
+        q0=pos0, k0=k0, chunk_q=chunk_q, chunk_kv=chunk_kv, group=group,
+    )
+    proj = dense(out.reshape(b, s, cfg.n_heads * cfg.head_dim), params["wo"])
+    return proj, ((k, v) if return_kv else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, C, Kv, hd) -- C = S_max (global) or window (local ring)
+    v: jax.Array
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(position, head) scales -- SymED's bounded-error
+    compression idea applied to serving state: halves decode HBM vs bf16, and
+    the dequant folds into the attention einsums (scale factors out of the hd
+    contraction), so no full-precision copy ever materializes."""
+
+    k_q: jax.Array   # (B, C, Kv, hd) int8
+    v_q: jax.Array
+    k_s: jax.Array   # (B, C, Kv, 1) bf16 scales
+    v_s: jax.Array
+
+
+def _quantize(x: jax.Array):
+    """(..., hd) -> int8 values + bf16 scale over the hd dim."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, attn_type: str, dtype,
+                  quant: bool = False):
+    c = min(max_len, cfg.window) if attn_type == "local" else max_len
+    shape = (batch, c, cfg.n_kv_heads, cfg.head_dim)
+    if quant:
+        sshape = shape[:-1] + (1,)
+        return QuantKVCache(
+            k_q=jnp.zeros(shape, jnp.int8), v_q=jnp.zeros(shape, jnp.int8),
+            k_s=jnp.zeros(sshape, jnp.bfloat16), v_s=jnp.zeros(sshape, jnp.bfloat16),
+        )
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attn_apply_decode(
+    params: dict,
+    cfg,
+    x1: jax.Array,          # (B, 1, d)
+    cache: KVCache,
+    pos: jax.Array,         # () int32 -- position of the new token
+    *,
+    attn_type: str = "global",
+    kv_memory: Optional[KVCache] = None,
+):
+    """One-token attention against the cache; returns (out, new_cache)."""
+    b = x1.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    group = h // kvh
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    quant = isinstance(cache, QuantKVCache) or isinstance(kv_memory, QuantKVCache)
+    if kv_memory is not None:
+        # cross-attention: static memory, no cache update
+        q = dense(x1, params["wq"], params.get("bq")).reshape(b, 1, h, hd)
+        kc = kv_memory
+        c = (kc.k_q if quant else kc.k).shape[1]
+        new_cache = cache
+        valid = jnp.ones((c,), bool)
+    else:
+        q, k1, v1 = _project_qkv(params, cfg, x1, positions)
+        c = (cache.k_q if quant else cache.k).shape[1]
+        slot = jnp.asarray(pos % c if attn_type == "local" else pos, jnp.int32)
+        if quant:
+            k1q, k1s = _quantize(k1)
+            v1q, v1s = _quantize(v1)
+            upd = lambda buf, val: jax.lax.dynamic_update_slice(
+                buf, val.astype(buf.dtype), (0, slot, 0, 0))
+            kc = QuantKVCache(
+                k_q=upd(cache.k_q, k1q), v_q=upd(cache.v_q, v1q),
+                k_s=upd(cache.k_s, k1s), v_s=upd(cache.v_s, v1s),
+            )
+        else:
+            kc = KVCache(
+                k=jax.lax.dynamic_update_slice(
+                    cache.k, k1.astype(cache.k.dtype), (0, slot, 0, 0)),
+                v=jax.lax.dynamic_update_slice(
+                    cache.v, v1.astype(cache.v.dtype), (0, slot, 0, 0)),
+            )
+        new_cache = kc
+        idx = jnp.arange(c)
+        if attn_type == "local":
+            valid = (idx <= pos % c) | (pos >= c)   # occupied ring slots
+        else:
+            valid = idx <= pos
+
+    qr = q.reshape(b, kvh, group, hd)
+    if quant:
+        # dequant folds into the einsums: scale factors out of the hd dot
+        s = jnp.einsum("bkgh,bskh->bkgs", qr, kc.k_q.astype(qr.dtype),
+                       preferred_element_type=jnp.float32)
+        s = s * kc.k_s[..., 0].astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    else:
+        s = jnp.einsum("bkgh,bskh->bkgs", qr, kc.k,
+                       preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    if quant:
+        pv = p * kc.v_s[..., 0].astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        out = jnp.einsum("bkgs,bskh->bkgh", pv.astype(x1.dtype),
+                         kc.v_q.astype(x1.dtype),
+                         preferred_element_type=jnp.float32).astype(x1.dtype)
+    else:
+        out = jnp.einsum("bkgs,bskh->bkgh", p.astype(kc.v.dtype), kc.v,
+                         preferred_element_type=jnp.float32).astype(x1.dtype)
+    out = out.reshape(b, 1, h * hd)
+    return dense(out, params["wo"]), new_cache

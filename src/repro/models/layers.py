@@ -1,0 +1,147 @@
+"""Common model layers: norms, MLP variants, embeddings, rotary positions.
+
+Pure-function style (params are plain dict pytrees) so the partitioner in
+``repro.sharding`` can pattern-match on tree paths.  Matmuls run in the model
+dtype (bf16 on TPU) with f32 accumulation; norms and softmax run in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "mlp_apply", "mlp_init", "embed_init", "rope", "dense",
+    "init_dense", "model_dtype",
+]
+
+
+def model_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with (1 + scale) gain (gemma convention), f32 internals."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+@jax.custom_vjp
+def _matmul_bf16_grads(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x @ w: f32 MXU accumulation forward, *bf16 weight/input gradients*.
+
+    The default VJP inherits preferred_element_type=f32, materializing
+    full-size f32 weight-grad partials per layer before their reduce-scatter
+    -- the dominant HBM buffer at jamba-398B scale (dry-run iteration log).
+    bf16 grads halve that; gradient *accumulation* stays f32 upstream
+    (optimizer moments / accum buffers)."""
+    return _mm_fwd(x, w)[0]
+
+
+def _mm_fwd(x, w):
+    y = jax.lax.dot_general(
+        x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    return y, (x, w)
+
+
+def _mm_bwd(res, g):
+    x, w = res
+    g = g.astype(x.dtype)
+    dims = tuple(range(x.ndim - 1))
+    dx = jax.lax.dot_general(
+        g, w.astype(g.dtype), (((g.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    dw = jax.lax.dot_general(
+        x, g, ((dims, dims), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(w.dtype)
+    return dx, dw
+
+
+_matmul_bf16_grads.defvjp(_mm_fwd, _mm_bwd)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    """x @ w with f32 accumulation, output cast back to x.dtype."""
+    y = _matmul_bf16_grads(x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP: swiglu (llama/gemma/mixtral), gelu (whisper/paligemma), relu2 (nemotron)
+# ---------------------------------------------------------------------------
+
+GATED_MLP = ("swiglu", "geglu")
+
+
+def mlp_init(key, cfg) -> dict:
+    dt = model_dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    d, f = cfg.d_model, cfg.d_ff
+    width = 2 * f if cfg.mlp_kind in GATED_MLP else f
+    return {"wi": init_dense(k1, d, width, dt), "wo_mlp": init_dense(k2, f, d, dt)}
+
+
+def mlp_activate(h: jax.Array, kind: str, out_dtype) -> jax.Array:
+    """Shared nonlinearity for dense and MoE FFNs."""
+    if kind in GATED_MLP:
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        return act(gate.astype(jnp.float32)).astype(out_dtype) * up
+    if kind == "gelu":
+        return jax.nn.gelu(h.astype(jnp.float32)).astype(out_dtype)
+    if kind == "relu2":  # squared ReLU (nemotron-4)
+        r = jnp.maximum(h, 0.0)
+        return (r * r).astype(out_dtype)
+    raise ValueError(f"unknown mlp kind {kind}")
+
+
+def mlp_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    h = dense(x, params["wi"])
+    return dense(mlp_activate(h, kind, x.dtype), params["wo_mlp"])
+
+
+def sinusoid_pos(positions: jax.Array, d: int) -> jax.Array:
+    """Parameter-free sinusoidal positions (whisper-style stand-in)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (9.21034 / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.  x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN with top-k routing and grouped one-hot dispatch.
+
+GShard/Switch-style capacity-bounded dispatch, evaluated group-by-group under
+``lax.scan`` so the (g, e, cap) dispatch tensors never exceed one group's
+working set.  Dispatch/combine are dense einsums: on TPU they are MXU matmuls
+and shard cleanly -- experts over the ``model`` axis when divisible (expert
+parallelism), otherwise the per-expert hidden dim is tensor-parallel (see
+``repro.sharding.rules``).  No ragged all-to-all is required at dry-run level.
+
+Load-balancing auxiliary loss follows Switch/Mixtral: sum(frac_tokens *
+frac_router_prob) * E * coef, computed over all tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import GATED_MLP, init_dense, mlp_activate, model_dtype
+from repro.sharding import constrain
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg) -> dict:
+    dt = model_dtype(cfg)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    width = 2 * f if cfg.mlp_kind in GATED_MLP else f
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "router": init_dense(k1, d, e, jnp.float32),  # router kept f32
+        "wi_moe": (jax.random.normal(k2, (e, d, width), jnp.float32) * d ** -0.5).astype(dt),
+        "wo_moe": (jax.random.normal(k3, (e, f, d), jnp.float32) * f ** -0.5).astype(dt),
+    }
+
+
+def _expert_ffn(params, cfg, buf):
+    """buf: (e, cap, d) -> (e, cap, d).
+
+    Constraints pin the EP (+f-over-data) layout so neither expert matmul
+    gathers its weight (gathered f32 weight-grads dominated HBM otherwise).
+    """
+    buf = constrain(buf, "experts_act", None, None)
+    h = jnp.einsum("ecz,ezf->ecf", buf, params["wi_moe"],
+                   preferred_element_type=jnp.float32).astype(buf.dtype)
+    h = constrain(h, "experts_act", None, "moe_f_act")
+    h = mlp_activate(h, cfg.mlp_kind, buf.dtype)
+    h = constrain(h, "experts_act", None, "moe_f_act")
+    out = jnp.einsum("ecf,efz->ecz", h, params["wo_moe"],
+                     preferred_element_type=jnp.float32).astype(buf.dtype)
+    return constrain(out, "experts_act", None, None)
+
+
+def moe_apply(params: dict, cfg, x: jax.Array, *, group_size: int = 4096):
+    """x: (B, S, d) -> (y, aux_loss).  Capacity-dropped tokens contribute 0."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * s
+    g = min(group_size, n)
+    if n % g:
+        g = n  # odd smoke shapes: single group
+    n_groups = n // g
+    cap = max(int(cfg.capacity_factor * g * k / e), 1)
+
+    xt = x.reshape(n_groups, g, d)
+    logits = jnp.einsum("Ggd,de->Gge", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    @jax.checkpoint  # backward re-derives dispatch/combine tensors per group
+    def per_group(_, xs):
+        xg, gi, gv = xs                                        # (g,d) (g,k) (g,k)
+        onehot = jax.nn.one_hot(gi, e, dtype=jnp.float32)      # (g, k, e)
+        flat = onehot.reshape(g * k, e)
+        pos = (jnp.cumsum(flat, axis=0) - 1.0) * flat          # queue position
+        pos = pos.reshape(g, k, e)
+        keep = (pos < cap) & (onehot > 0)
+        slot = jnp.where(keep, pos, cap).astype(jnp.int32)     # cap => dropped
+        comb = jax.nn.one_hot(slot, cap, dtype=jnp.float32)    # (g, k, e, cap)
+        comb = jnp.sum(comb * gv[..., None, None], axis=1)     # (g, e, cap)
+        disp = (comb > 0).astype(xg.dtype)
+
+        buf = jnp.einsum("gec,gz->ecz", disp, xg,
+                         preferred_element_type=jnp.float32).astype(xg.dtype)
+        out_e = _expert_ffn(params, cfg, buf)
+        yg = jnp.einsum("gec,ecz->gz", comb.astype(xg.dtype), out_e,
+                        preferred_element_type=jnp.float32).astype(xg.dtype)
+        return (), yg
+
+    _, y = jax.lax.scan(per_group, (), (xt, gate_idx, gate_vals))
+
+    # --- Switch-style load-balance aux loss (over all tokens) --------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx.reshape(-1, k)[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = jnp.sum(frac_tokens * frac_probs) * e * cfg.router_aux_coef
+
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,37 @@
+"""Parameter accounting (feeds MODEL_FLOPS = 6*N*D in the roofline)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["param_shapes", "count_params"]
+
+
+@functools.lru_cache(maxsize=64)
+def param_shapes(cfg):
+    """Abstract param tree (ShapeDtypeStructs) -- no allocation."""
+    from repro.models.transformer import init_params
+
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def _leaf_count(path_str: str, leaf, cfg, active_only: bool) -> int:
+    n = 1
+    for s in leaf.shape:
+        n *= s
+    if active_only and ("_moe" in path_str) and cfg.n_experts:
+        # only top_k of n_experts experts touch each token
+        n = n * cfg.top_k // cfg.n_experts
+    return n
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    from repro.sharding.partition import _path_str
+
+    shapes = param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        total += _leaf_count(_path_str(path), leaf, cfg, active_only)
+    return total

@@ -1,0 +1,507 @@
+"""Model assembly: superblock-scanned heterogeneous stacks, train/prefill/
+decode paths, for every assigned architecture family.
+
+Heterogeneity (jamba 1:7 mamba:attn, gemma3 5:1 local:global, xlstm
+mLSTM/sLSTM mixes) is expressed as a *superblock* -- a static tuple of
+``LayerSpec``s -- scanned ``n_blocks`` times over stacked params.  The lowered
+HLO contains each distinct layer body once, which is what keeps 512-device
+dry-run compiles tractable at 72-layer scale.
+
+Three execution modes share one layer dispatcher:
+  * ``train``   -- full-sequence, blockwise attention, remat inside the scan,
+  * ``prefill`` -- train-path compute that additionally materializes decode
+                   caches (KV tensors, SSM/xLSTM states),
+  * ``decode``  -- one token against the caches (``serve_step``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import KVCache
+from repro.models.layers import (
+    dense, embed_init, init_dense, mlp_apply, mlp_init, model_dtype, rms_norm,
+    sinusoid_pos,
+)
+from repro.sharding import constrain
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "init_decode_state", "decode_step",
+    "prefill",
+]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg, spec, decoder: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if spec.kind == "attn":
+        p.update(attn_mod.attn_init(ks[0], cfg))
+        if decoder and cfg.cross_attention:
+            p["lnx"] = jnp.zeros((d,), jnp.float32)
+            p["cross"] = attn_mod.attn_init(ks[1], cfg)
+    elif spec.kind == "mamba":
+        p["mamba"] = ssm_mod.ssm_init(ks[0], cfg)
+    elif spec.kind == "mlstm":
+        p["mlstm"] = xlstm_mod.mlstm_init(ks[0], cfg)
+    elif spec.kind == "slstm":
+        p["slstm"] = xlstm_mod.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.has_mlp:
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        if spec.moe:
+            p["moe"] = moe_mod.moe_init(ks[2], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg)
+    return p
+
+
+def _superblock_init(key, cfg, pattern, decoder: bool) -> Tuple[Dict, ...]:
+    keys = jax.random.split(key, max(len(pattern), 1))
+    return tuple(
+        _layer_init(k, cfg, spec, decoder) for k, spec in zip(keys, pattern)
+    )
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, model_dtype(cfg)),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.n_blocks > 0:
+        block_keys = jax.random.split(ks[1], cfg.n_blocks)
+        params["blocks"] = jax.vmap(
+            lambda k: _superblock_init(k, cfg, cfg.block_pattern, decoder=True)
+        )(block_keys)
+    if cfg.tail_pattern:
+        params["tail"] = _superblock_init(ks[2], cfg, cfg.tail_pattern, decoder=True)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(ks[3], cfg.d_model, cfg.vocab, model_dtype(cfg), scale=0.02)
+    if cfg.enc_blocks > 0:
+        enc_keys = jax.random.split(ks[4], cfg.enc_blocks)
+        enc_pattern = (type(cfg.block_pattern[0])(kind="attn"),)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _superblock_init(k, cfg, enc_pattern, decoder=False)
+        )(enc_keys)
+        params["enc_ln_f"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer dispatch (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(p, cfg, spec, x, aux, *, enc_mem, mode_override, collect, pos0=0):
+    """Returns (x, aux, cache_or_None)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    cache = None
+    if spec.kind == "attn":
+        out, kv = attn_mod.attn_apply_train(
+            p, cfg, h, attn_type=spec.attn_type, mode_override=mode_override,
+            pos0=pos0, return_kv=collect,
+        )
+        x = x + out
+        if enc_mem is not None and cfg.cross_attention:
+            hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+            xo, xkv = attn_mod.attn_apply_train(
+                p["cross"], cfg, hx, kv_memory=enc_mem, return_kv=collect
+            )
+            x = x + xo
+            cache = (kv, xkv) if collect else None
+        else:
+            cache = (kv, None) if collect else None
+    elif spec.kind == "mamba":
+        out, st = ssm_mod.ssm_apply_train(p["mamba"], cfg, h, return_state=collect)
+        x = x + out
+        cache = st
+    elif spec.kind == "mlstm":
+        out = xlstm_mod.mlstm_apply_train(p["mlstm"], cfg, h)
+        if collect:
+            cache = xlstm_mod.mlstm_prefill_state(p["mlstm"], cfg, h)
+        return x + out, aux, cache
+    elif spec.kind == "slstm":
+        out, st = xlstm_mod.slstm_apply_train(p["slstm"], cfg, h, return_state=collect)
+        cache = st
+        return x + out, aux, cache
+    if spec.has_mlp:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            y, a = moe_mod.moe_apply(p["moe"], cfg, h2)
+            aux = aux + a
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.mlp_kind)
+        x = x + y
+    x = constrain(x, "batch", "seq_block", "embed")
+    return x, aux, cache
+
+
+def _stack_fwd(stacked, cfg, pattern, x, *, enc_mem, mode_override, collect,
+               remat: bool, decoder: bool):
+    """Scan superblocks; returns (x, aux, stacked_caches_or_None)."""
+
+    def one_layer(p, spec, x, aux):
+        return _layer_fwd(
+            p, cfg, spec, x, aux,
+            enc_mem=enc_mem if decoder else None,
+            mode_override=mode_override, collect=collect,
+        )
+
+    def block_body(carry, block_params):
+        x, aux = carry
+        caches = []
+        for i, (p, spec) in enumerate(zip(block_params, pattern)):
+            f = one_layer
+            if remat:
+                # nested remat: block-level checkpoint bounds boundary storage,
+                # layer-level checkpoint bounds the recompute working set to a
+                # single layer's internals (critical for 8-layer jamba blocks)
+                f = jax.checkpoint(
+                    one_layer, policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=(1,),
+                )
+            x, aux, c = f(p, spec, x, aux)
+            caches.append(c)
+        return (x, aux), tuple(caches) if collect else None
+
+    body = block_body
+    if remat:
+        body = jax.checkpoint(
+            block_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux, caches
+
+
+def _embed_tokens(params, cfg, tokens, pos0=0):
+    x = params["embed"][tokens].astype(model_dtype(cfg))
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos_kind == "sinusoid":
+        pos = pos0 + jnp.arange(tokens.shape[1])[None, :]
+        x = x + sinusoid_pos(pos, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _encode(params, cfg, enc_frames):
+    """Whisper-style encoder over (stubbed) frame embeddings."""
+    enc_pattern = (type(cfg.block_pattern[0])(kind="attn"),)
+    x = enc_frames.astype(model_dtype(cfg))
+    x, _, _ = _stack_fwd(
+        params["enc_blocks"], cfg, enc_pattern, x,
+        enc_mem=None, mode_override="bidir", collect=False, remat=True,
+        decoder=False,
+    )
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def forward(
+    params, cfg, tokens, *,
+    prefix_embeds=None, enc_frames=None, collect: bool = False, remat: bool = True,
+):
+    """Full-sequence forward.
+
+    Returns (activations (B, S_total, d), aux_loss, caches, enc_mem).
+    ``S_total`` includes the VLM prefix if present.
+    """
+    x = _embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", "seq_block", "embed")
+
+    enc_mem = _encode(params, cfg, enc_frames) if enc_frames is not None else None
+
+    caches_tail = []
+    x, aux, caches = _stack_fwd(
+        params["blocks"], cfg, cfg.block_pattern, x,
+        enc_mem=enc_mem, mode_override=None, collect=collect, remat=remat,
+        decoder=True,
+    )
+    if cfg.tail_pattern:
+        for p, spec in zip(params["tail"], cfg.tail_pattern):
+            x, aux, c = _layer_fwd(
+                p, cfg, spec, x, aux, enc_mem=enc_mem, mode_override=None,
+                collect=collect,
+            )
+            caches_tail.append(c)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, (caches, tuple(caches_tail)), enc_mem
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence; vocab-sharded logits never fully materialized)
+# ---------------------------------------------------------------------------
+
+def _unembed(params, cfg, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jax.lax.dot_general(
+        x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def chunked_xent(params, cfg, x, labels, *, chunk: int = 512):
+    """Mean next-token NLL.  labels < 0 are ignored.  x: (B, S, d)."""
+    b, s, _ = x.shape
+    c = min(chunk, s)
+    while s % c:  # e.g. vlm prefix makes S=4352: largest divisor <= chunk
+        c -= 1
+    nc = s // c
+    xs = jnp.moveaxis(x.reshape(b, nc, c, -1), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+
+    @jax.checkpoint  # recompute per-chunk logits in backward: saves (b,c,V) f32
+    def step(carry, xs_c):
+        tot, cnt = carry
+        xc, lc = xs_c
+        logits = _unembed(params, cfg, xc)                  # (b, c, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - tgt) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())), (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg, batch, *, remat: bool = True):
+    """batch: tokens (B,S) i32, plus optional prefix_embeds / enc_frames."""
+    tokens = batch["tokens"]
+    x, aux, _, _ = forward(
+        params, cfg, tokens,
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_frames=batch.get("enc_frames"),
+        collect=False, remat=remat,
+    )
+    prefix = 0 if batch.get("prefix_embeds") is None else batch["prefix_embeds"].shape[1]
+    # next-token labels; never predict across the prefix boundary
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1
+    )
+    if prefix:
+        pad = jnp.full((tokens.shape[0], prefix), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss = chunked_xent(params, cfg, x, labels)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache_template(cfg, spec, batch, max_len, dtype, with_cross):
+    if spec.kind == "attn":
+        self_c = attn_mod.init_kv_cache(cfg, batch, max_len, spec.attn_type,
+                                        dtype, quant=cfg.kv_quant)
+        cross_c = (
+            attn_mod.init_kv_cache(cfg, batch, cfg.num_prefix_embeds or 1, "global", dtype)
+            if with_cross else None
+        )
+        return (self_c, cross_c)
+    if spec.kind == "mamba":
+        return ssm_mod.init_ssm_state(cfg, batch)
+    if spec.kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if spec.kind == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    raise ValueError(spec.kind)
+
+
+def init_decode_state(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    """Zeroed decode state (works under jax.eval_shape for the dry-run)."""
+    dtype = model_dtype(cfg)
+    with_cross = cfg.cross_attention
+
+    def block_caches(_):
+        return tuple(
+            _layer_cache_template(cfg, s, batch, max_len, dtype, with_cross)
+            for s in cfg.block_pattern
+        )
+
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.n_blocks:
+        state["blocks"] = jax.vmap(block_caches)(jnp.arange(cfg.n_blocks))
+    if cfg.tail_pattern:
+        state["tail"] = tuple(
+            _layer_cache_template(cfg, s, batch, max_len, dtype, with_cross)
+            for s in cfg.tail_pattern
+        )
+    if cfg.enc_blocks:
+        state["enc_mem"] = jnp.zeros(
+            (batch, cfg.num_prefix_embeds or 1, cfg.d_model), dtype
+        )
+    return state
+
+
+def _layer_decode(p, cfg, spec, x1, cache, pos):
+    if spec.kind == "attn":
+        self_c, cross_c = cache
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        out, self_c = attn_mod.attn_apply_decode(
+            p, cfg, h, self_c, pos, attn_type=spec.attn_type
+        )
+        x1 = x1 + out
+        if cross_c is not None:
+            hx = rms_norm(x1, p["lnx"], cfg.norm_eps)
+            xo, _ = attn_mod.attn_apply_decode(
+                p["cross"], cfg, hx, self_c, pos, kv_memory=cross_c
+            )
+            x1 = x1 + xo
+        new_cache = (self_c, cross_c)
+    elif spec.kind == "mamba":
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        out, new_cache = ssm_mod.ssm_apply_decode(p["mamba"], cfg, h, cache)
+        x1 = x1 + out
+    elif spec.kind == "mlstm":
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        out, new_cache = xlstm_mod.mlstm_apply_decode(p["mlstm"], cfg, h, cache)
+        return x1 + out, new_cache
+    elif spec.kind == "slstm":
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        out, new_cache = xlstm_mod.slstm_apply_decode(p["slstm"], cfg, h, cache)
+        return x1 + out, new_cache
+    else:
+        raise ValueError(spec.kind)
+    if spec.has_mlp:
+        h2 = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            y, _ = moe_mod.moe_apply(p["moe"], cfg, h2, group_size=x1.shape[0])
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.mlp_kind)
+        x1 = x1 + y
+    return x1, new_cache
+
+
+def decode_step(params, cfg, state, token):
+    """One serve step: token (B, 1) i32 -> (logits (B, 1, V) f32, new state)."""
+    pos = state["pos"]
+    x1 = _embed_tokens(params, cfg, token, pos0=pos)
+    x1 = constrain(x1, "batch", None, "embed")
+
+    def block_body(x1, xs):
+        block_params, block_cache = xs
+        new_caches = []
+        for i, spec in enumerate(cfg.block_pattern):
+            x1, nc = _layer_decode(block_params[i], cfg, spec, x1, block_cache[i], pos)
+            new_caches.append(nc)
+        return x1, tuple(new_caches)
+
+    new_state = dict(state)
+    if cfg.n_blocks:
+        x1, new_blocks = jax.lax.scan(
+            block_body, x1, (params["blocks"], state["blocks"])
+        )
+        new_state["blocks"] = new_blocks
+    if cfg.tail_pattern:
+        new_tail = []
+        for p, spec, c in zip(params["tail"], cfg.tail_pattern, state["tail"]):
+            x1, nc = _layer_decode(p, cfg, spec, x1, c, pos)
+            new_tail.append(nc)
+        new_state["tail"] = tuple(new_tail)
+
+    x1 = rms_norm(x1, params["ln_f"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x1)
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+def prefill(params, cfg, tokens, *, prefix_embeds=None, enc_frames=None,
+            max_len: Optional[int] = None):
+    """Process a prompt; returns (last-position logits, ready decode state)."""
+    s_total = tokens.shape[1] + (
+        prefix_embeds.shape[1] if prefix_embeds is not None else 0
+    )
+    max_len = max_len or s_total
+    x, _, (caches, tail_caches), enc_mem = forward(
+        params, cfg, tokens, prefix_embeds=prefix_embeds, enc_frames=enc_frames,
+        collect=True, remat=False,
+    )
+    batch = tokens.shape[0]
+    state = init_decode_state(cfg, batch, max_len)
+    state["pos"] = jnp.asarray(s_total, jnp.int32)
+
+    if cfg.n_blocks:
+        state["blocks"] = _fill_stacked(cfg, state["blocks"], caches, s_total, max_len)
+    if cfg.tail_pattern:
+        state["tail"] = tuple(
+            _fill_cache(cfg, spec, t, g, s_total, max_len)
+            for spec, t, g in zip(cfg.tail_pattern, state["tail"], tail_caches)
+        )
+    if enc_mem is not None:
+        state["enc_mem"] = enc_mem
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, state
+
+
+def _fill_kv(cfg, attn_type, template, got, s_total, max_len):
+    k, v = got
+    quant = isinstance(template, attn_mod.QuantKVCache)
+    c = (template.k_q if quant else template.k).shape[1]
+    if attn_type == "local" and s_total > c:
+        # ring buffer: keep the last ``window`` entries at their ring slots
+        start = s_total - c
+        k = jax.lax.dynamic_slice_in_dim(k, start, c, axis=1)
+        v = jax.lax.dynamic_slice_in_dim(v, start, c, axis=1)
+        roll = s_total % c  # ring offset: slot(p) = p mod c
+        k = jnp.roll(k, roll, axis=1)
+        v = jnp.roll(v, roll, axis=1)
+    else:
+        pad = [(0, 0), (0, c - k.shape[1]), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    if quant:
+        k_q, k_s = attn_mod._quantize(k)
+        v_q, v_s = attn_mod._quantize(v)
+        return attn_mod.QuantKVCache(k_q=k_q, v_q=v_q, k_s=k_s, v_s=v_s)
+    return KVCache(k=k.astype(template.k.dtype), v=v.astype(template.v.dtype))
+
+
+def _fill_cache(cfg, spec, template, got, s_total, max_len):
+    if spec.kind == "attn":
+        kv, xkv = got
+        self_t, cross_t = template
+        self_c = _fill_kv(cfg, spec.attn_type, self_t, kv, s_total, max_len)
+        cross_c = cross_t
+        if cross_t is not None and xkv is not None:
+            cross_c = KVCache(
+                k=xkv[0].astype(cross_t.k.dtype), v=xkv[1].astype(cross_t.v.dtype)
+            )
+        return (self_c, cross_c)
+    return got  # recurrent states pass through
+
+
+def _fill_stacked(cfg, templates, got, s_total, max_len):
+    """Stacked (scan ys) caches -> decode-state layout, per superblock slot."""
+    out = []
+    for i, spec in enumerate(cfg.block_pattern):
+        t_i = jax.tree.map(lambda a: a, _tuple_idx(templates, i))
+        g_i = _tuple_idx(got, i)
+        if spec.kind == "attn":
+            filled = jax.vmap(
+                lambda t, g: _fill_cache(cfg, spec, t, g, s_total, max_len),
+                in_axes=(0, 0),
+            )(t_i, g_i)
+        else:
+            filled = g_i
+        out.append(filled)
+    return tuple(out)
+
+
+def _tuple_idx(tree_of_tuples, i):
+    return tree_of_tuples[i]

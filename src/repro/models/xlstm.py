@@ -1,0 +1,329 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential) -- the [ssm]-family arch xlstm-125m.
+
+mLSTM exponential gating is *separable*: with F_t = sum_{s<=t} logsigmoid(f_s)
+and g_s = i_s - F_s, the gate matrix is D_ts = F_t + g_s (s <= t) and its row
+max is m_t = F_t + cummax(g)_t -- both computable in O(S) up front.  The
+quadratic form then chunks exactly like flash attention but with *fixed*
+per-row stabilizers (no online max rescaling), and weights exp(g_s - M_t) <= 1
+by construction.  Decode uses the O(1) recurrent form with (C, n, m) state.
+
+sLSTM keeps per-head scalar memories with block-diagonal recurrence and is
+inherently sequential: a lax.scan over time (cheap at xlstm-125m scale; noted
+in DESIGN.md as the TPU-unfriendly layer).  Both blocks carry their own
+up/down projections (``has_mlp=False`` in their LayerSpec).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, model_dtype
+from repro.models.ssm import _causal_conv
+
+__all__ = [
+    "mlstm_init", "mlstm_apply_train", "MLSTMState", "init_mlstm_state",
+    "mlstm_apply_decode", "slstm_init", "slstm_apply_train", "SLSTMState",
+    "init_slstm_state", "slstm_apply_decode",
+]
+
+_CLAMP = 80.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg):
+    d_in = 2 * cfg.d_model
+    hd = d_in // cfg.n_heads
+    return d_in, hd
+
+
+def mlstm_init(key, cfg) -> dict:
+    dt = model_dtype(cfg)
+    d = cfg.d_model
+    d_in, hd = _mdims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_dense(ks[0], d, 2 * d_in, dt),
+        "conv_w": (jax.random.normal(ks[1], (4, d_in), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "wq": init_dense(ks[2], d_in, d_in, dt),
+        "wk": init_dense(ks[3], d_in, d_in, dt),
+        "wv": init_dense(ks[4], d_in, d_in, dt),
+        "wi": init_dense(ks[5], d_in, cfg.n_heads, jnp.float32, scale=0.01),
+        "wf": init_dense(ks[6], d_in, cfg.n_heads, jnp.float32, scale=0.01),
+        "bi": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "bf": jnp.full((cfg.n_heads,), 3.0, jnp.float32),  # open forget gates
+        "down": init_dense(ks[7], d_in, cfg.d_model, dt),
+    }
+
+
+def _mlstm_qkv_gates(params, cfg, xm):
+    b, s, d_in = xm.shape
+    h = cfg.n_heads
+    hd = d_in // h
+    xc = _causal_conv(xm, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(xm.dtype)
+    q = dense(xc, params["wq"]).reshape(b, s, h, hd)
+    k = dense(xc, params["wk"]).reshape(b, s, h, hd) * (hd ** -0.5)
+    v = dense(xm, params["wv"]).reshape(b, s, h, hd)
+    i_pre = xm.astype(jnp.float32) @ params["wi"] + params["bi"]   # (b,s,h)
+    f_pre = xm.astype(jnp.float32) @ params["wf"] + params["bf"]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_apply_train(params: dict, cfg, x: jax.Array, *, chunk: int = 512) -> jax.Array:
+    b, s, d = x.shape
+    d_in, hd = _mdims(cfg)
+    h = cfg.n_heads
+    xz = dense(x, params["up"])
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    q, k, v, i_pre, f_pre = _mlstm_qkv_gates(params, cfg, xm)
+
+    logf = jax.nn.log_sigmoid(f_pre)                   # (b,s,h)
+    F = jnp.cumsum(logf, axis=1)                       # F_t
+    g = i_pre - F                                      # g_s = i_s - F_s
+    M = jax.lax.cummax(g, axis=1)                      # row stabilizer source
+    # m_t = F_t + M_t; normalizer floor exp(-m_t), clamped
+    neg_m = jnp.clip(-(F + M), a_max=_CLAMP)
+
+    cq = min(chunk, s)
+    if s % cq:
+        cq = s  # non-power-of-two smoke shapes: single chunk
+    nq = s // cq
+
+    def per_q(qi, args):
+        qc, Mc, negm_c = args                          # (b,cq,h,hd) (b,cq,h) ..
+        q0 = qi * cq
+        qpos = q0 + jnp.arange(cq)
+
+        def kv_step(carry, xs):
+            l_run, acc = carry
+            ki, kc, vc, gc = xs
+            kpos = ki * cq + jnp.arange(cq)
+            # scores: (b, h, cq, ck)
+            sc = jnp.einsum("bqhd,bshd->bhqs", qc, kc,
+                            preferred_element_type=jnp.float32)
+            logw = gc.transpose(0, 2, 1)[:, :, None, :] - Mc.transpose(0, 2, 1)[:, :, :, None]
+            mask = (kpos[None, :] <= qpos[:, None])[None, None]
+            wgt = jnp.where(mask, jnp.exp(jnp.clip(logw, a_max=0.0)), 0.0)
+            sc = sc * wgt
+            l_run = l_run + jnp.sum(sc, axis=-1)
+            acc = acc + jnp.einsum("bhqs,bshd->bhqd", sc.astype(vc.dtype), vc,
+                                   preferred_element_type=jnp.float32)
+            return (l_run, acc), None
+
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        (l_f, acc), _ = jax.lax.scan(
+            kv_step, (l0, a0),
+            (jnp.arange(nq),
+             jnp.moveaxis(k.reshape(b, nq, cq, h, hd), 1, 0),
+             jnp.moveaxis(v.reshape(b, nq, cq, h, hd), 1, 0),
+             jnp.moveaxis(g.reshape(b, nq, cq, h), 1, 0)),
+        )
+        norm = jnp.maximum(jnp.abs(l_f), jnp.exp(negm_c.transpose(0, 2, 1)))
+        out = acc / norm[..., None]
+        return jnp.moveaxis(out, 2, 1)                 # (b, cq, h, hd)
+
+    outs = jax.lax.map(
+        jax.checkpoint(lambda xs: per_q(xs[0], (xs[1], xs[2], xs[3]))),
+        (jnp.arange(nq),
+         jnp.moveaxis(q.reshape(b, nq, cq, h, hd), 1, 0),
+         jnp.moveaxis(M.reshape(b, nq, cq, h), 1, 0),
+         jnp.moveaxis(neg_m.reshape(b, nq, cq, h), 1, 0)),
+    )
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return dense(y, params["down"])
+
+
+def mlstm_prefill_state(params: dict, cfg, x: jax.Array) -> "MLSTMState":
+    """Closed-form recurrent state after a full prompt (separable gating):
+
+    C_T = sum_s exp(F_T - F_s + i_s - m_T) v_s k_s^T,   m_T = F_T + M_T.
+    """
+    b, s, _ = x.shape
+    d_in, hd = _mdims(cfg)
+    xz = dense(x, params["up"])
+    xm, _ = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkv_gates(params, cfg, xm)
+    del q
+    logf = jax.nn.log_sigmoid(f_pre)
+    F = jnp.cumsum(logf, axis=1)
+    g = i_pre - F                                # (b, s, h)
+    m_T = F[:, -1] + jnp.max(g, axis=1)          # (b, h)
+    # weight_s = exp(F_T + g_s - m_T) = exp(g_s - max g) <= 1
+    w = jnp.exp(g - jnp.max(g, axis=1, keepdims=True))
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c = jnp.einsum("bsh,bshv,bshk->bhvk", w, vf, kf)
+    n = jnp.einsum("bsh,bshk->bhk", w, kf)
+    buf = jnp.pad(xm.astype(jnp.float32), ((0, 0), (3, 0), (0, 0)))[:, -3:]
+    return MLSTMState(c=c, n=n, m=m_T, conv_buf=buf)
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array        # (B, H, hd, hd) f32 matrix memory
+    n: jax.Array        # (B, H, hd)
+    m: jax.Array        # (B, H)
+    conv_buf: jax.Array # (B, 3, d_in)
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    d_in, hd = _mdims(cfg)
+    h = cfg.n_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.zeros((batch, h), jnp.float32),
+        conv_buf=jnp.zeros((batch, 3, d_in), jnp.float32),
+    )
+
+
+def mlstm_apply_decode(params: dict, cfg, x1: jax.Array, state: MLSTMState):
+    b = x1.shape[0]
+    d_in, hd = _mdims(cfg)
+    xz = dense(x1, params["up"])
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    xc = _causal_conv(xm, params["conv_w"], params["conv_b"], prepend=state.conv_buf)
+    xc = jax.nn.silu(xc[:, -1:].astype(jnp.float32)).astype(x1.dtype)
+    h_ = cfg.n_heads
+    q = dense(xc, params["wq"]).reshape(b, h_, hd)
+    k = dense(xc, params["wk"]).reshape(b, h_, hd) * (hd ** -0.5)
+    v = dense(xm, params["wv"]).reshape(b, h_, hd)
+    i_pre = (xm[:, 0].astype(jnp.float32) @ params["wi"] + params["bi"])
+    f_pre = (xm[:, 0].astype(jnp.float32) @ params["wf"] + params["bf"])
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state.m, i_pre)
+    f_eff = jnp.exp(jnp.clip(logf + state.m - m_new, a_max=_CLAMP))
+    i_eff = jnp.exp(jnp.clip(i_pre - m_new, a_max=_CLAMP))
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = f_eff[..., None, None] * state.c + i_eff[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :]
+    )
+    n = f_eff[..., None] * state.n + i_eff[..., None] * kf
+    num = jnp.einsum("bhvk,bhk->bhv", c, qf)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+        jnp.exp(jnp.clip(-m_new, a_max=_CLAMP)),
+    )
+    hcell = (num / den[..., None]).reshape(b, 1, d_in).astype(x1.dtype)
+    y = hcell * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype)
+    new_state = MLSTMState(
+        c=c, n=n, m=m_new,
+        conv_buf=jnp.concatenate([state.conv_buf[:, 1:], xm.astype(jnp.float32)], axis=1),
+    )
+    return dense(y, params["down"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _sdims(cfg):
+    hd = cfg.d_model // cfg.n_heads
+    pf = (4 * cfg.d_model + 2) // 3  # xLSTM projection factor 4/3
+    return hd, pf
+
+
+def slstm_init(key, cfg) -> dict:
+    dt = model_dtype(cfg)
+    d, h = cfg.d_model, cfg.n_heads
+    hd, pf = _sdims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": init_dense(ks[0], d, 4 * d, dt),
+        "r": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32) * hd ** -0.5).astype(dt),
+        "b": jnp.concatenate([
+            jnp.zeros((d,), jnp.float32),            # i
+            jnp.full((d,), 3.0, jnp.float32),        # f (open)
+            jnp.zeros((2 * d,), jnp.float32),        # z, o
+        ]),
+        "ffn_up": init_dense(ks[2], d, 2 * pf, dt),
+        "ffn_down": init_dense(ks[3], pf, d, dt),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd)
+    n: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H, hd)
+    h: jax.Array  # (B, H, hd)
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    hd, _ = _sdims(cfg)
+    shape = (batch, cfg.n_heads, hd)
+    z = jnp.zeros(shape, jnp.float32)
+    return SLSTMState(c=z, n=z, m=z, h=z)
+
+
+def _slstm_cell(params, cfg, xg, state: SLSTMState):
+    """One time step.  xg: (B, 4*d) f32 pre-activations from x (incl. bias)."""
+    b = xg.shape[0]
+    h, (hd, _) = cfg.n_heads, _sdims(cfg)
+    rec = jnp.einsum("bhk,hkg->bhg", state.h, params["r"].astype(jnp.float32))
+    pre = xg.reshape(b, 4, h, hd).transpose(0, 2, 1, 3).reshape(b, h, 4 * hd) + rec
+    i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)      # (b, h, hd) each
+
+    m_new = jnp.maximum(f_p + state.m, i_p)
+    i_eff = jnp.exp(jnp.clip(i_p - m_new, a_max=_CLAMP))
+    f_eff = jnp.exp(jnp.clip(f_p + state.m - m_new, a_max=_CLAMP))
+    c = f_eff * state.c + i_eff * jnp.tanh(z_p)
+    n = f_eff * state.n + i_eff
+    h_new = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, m=m_new, h=h_new)
+
+
+def _slstm_ffn(params, cfg, y):
+    up = dense(y, params["ffn_up"])
+    gate, u = jnp.split(up, 2, axis=-1)
+    act = jax.nn.gelu(gate.astype(jnp.float32)).astype(y.dtype) * u
+    return dense(act, params["ffn_down"])
+
+
+def slstm_apply_train(
+    params: dict, cfg, x: jax.Array, *, return_state: bool = False,
+    chunk: int = 256,
+):
+    b, s, d = x.shape
+    xg = (dense(x, params["wx"]).astype(jnp.float32) + params["b"])
+
+    def step(state, xg_t):
+        new = _slstm_cell(params, cfg, xg_t, state)
+        return new, new.h
+
+    # two-level checkpointed scan: backward stores only chunk-boundary states
+    c = min(chunk, s)
+    if s % c:
+        c = s
+    nc = s // c
+    xg_c = jnp.moveaxis(xg, 1, 0).reshape(nc, c, b, xg.shape[-1])
+
+    @jax.checkpoint
+    def chunk_body(state, xg_chunk):
+        fin, hs = jax.lax.scan(step, state, xg_chunk)
+        return fin, hs
+
+    init = init_slstm_state(cfg, b)
+    fin, hs = jax.lax.scan(chunk_body, init, xg_c)
+    y = jnp.moveaxis(hs.reshape(s, b, -1), 0, 1).reshape(b, s, d).astype(x.dtype)
+    return _slstm_ffn(params, cfg, y), (fin if return_state else None)
+
+
+def slstm_apply_decode(params: dict, cfg, x1: jax.Array, state: SLSTMState):
+    b = x1.shape[0]
+    xg = dense(x1, params["wx"])[:, 0].astype(jnp.float32) + params["b"]
+    new = _slstm_cell(params, cfg, xg, state)
+    y = new.h.reshape(b, 1, cfg.d_model).astype(x1.dtype)
+    return _slstm_ffn(params, cfg, y), new

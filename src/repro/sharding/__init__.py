@@ -1,0 +1,17 @@
+"""Sharding: logical-axis rules -> PartitionSpecs with divisibility fallback.
+
+``partition`` maps param-tree paths and logical activation axes onto mesh
+axes (t5x/MaxText style); ``ctx`` provides the ambient-mesh constraint helper
+used inside model code.
+"""
+from repro.sharding.ctx import constrain, use_mesh_rules, current_mesh
+from repro.sharding.partition import (
+    logical_to_spec,
+    param_specs,
+    spec_for_path,
+)
+
+__all__ = [
+    "constrain", "use_mesh_rules", "current_mesh",
+    "logical_to_spec", "param_specs", "spec_for_path",
+]

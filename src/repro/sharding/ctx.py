@@ -1,0 +1,57 @@
+"""Ambient mesh context for activation sharding constraints.
+
+Model code calls ``constrain(x, "batch", None, "heads")`` with *logical* axis
+names; if a mesh context is active the names resolve to mesh axes (with
+divisibility fallback) and a ``with_sharding_constraint`` is applied, otherwise
+it is a no-op -- so the same model code runs on 1 CPU device (smoke tests) and
+on the 512-way production mesh (dry-run) unchanged.
+
+``exclude`` removes mesh axes from resolution -- used by the compressed train
+step, where the ``pod`` axis is shard_map-manual and must not appear in
+constraints issued inside the body.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+_CTX: contextvars.ContextVar[Optional[Tuple[Mesh, Tuple[str, ...]]]] = (
+    contextvars.ContextVar("repro_mesh_ctx", default=None)
+)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, exclude: Tuple[str, ...] = (),
+                  disable: Tuple[str, ...] = ()):
+    """``exclude``: mesh axes constraints may not touch (shard_map-manual).
+    ``disable``: *logical* names to no-op -- e.g. ``seq_block`` turns off
+    sequence parallelism (per-arch perf lever: SP saves scan-boundary memory
+    but forces full-size weight gathers/grads -- net negative for jamba,
+    positive for deep dense stacks; see EXPERIMENTS.md Sec. Perf)."""
+    token = _CTX.set((mesh, tuple(exclude), tuple(disable)))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _CTX.get()
+    return ctx[0] if ctx else None
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a logical-axis sharding constraint if a mesh context is active."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, exclude, disable = ctx
+    from repro.sharding.partition import logical_to_spec
+
+    logical = tuple(None if l in disable else l for l in logical)
+    spec = logical_to_spec(logical, x.shape, mesh, exclude=exclude)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,191 @@
+"""Logical-axis -> mesh-axis resolution with divisibility fallback.
+
+Every logical name carries an ordered candidate list of mesh axes (or axis
+tuples).  Resolution picks the first candidate whose axes all exist in the
+mesh, whose product divides the tensor dim, and which is disjoint from axes
+already used elsewhere in the same spec -- otherwise the dim is replicated.
+This is what makes one rule table serve every assigned arch: paligemma's 8 q
+heads fall back from ``heads``(16-way) to ``head_dim``; nemotron's 8 kv heads
+fall back to replication; olmoe's 64 experts take true expert parallelism
+while mixtral's 8 fall back to tensor-parallel d_ff.
+
+Param-tree specs are resolved from leaf *path names* (see ``_PARAM_RULES``);
+model params use stable key names precisely so this table can match them.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["logical_to_spec", "param_specs", "spec_for_path", "LOGICAL_RULES"]
+
+# Ordered candidates per logical axis.  Entries are tuples of mesh axes that
+# shard the dim jointly (e.g. batch over pod x data).
+LOGICAL_RULES: dict[str, Sequence[Tuple[str, ...]]] = {
+    "batch": [("pod", "data"), ("data",)],
+    "fsdp": [("data",)],                 # param "long" dim: FSDP sharding
+    "vocab": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [("model",)],
+    "qkv_fused": [("model",)],           # fused H*hd dim -- always divisible
+    "mlp": [("model",)],
+    "experts": [("model",)],
+    # MoE expert weights: shard the *non-contracting* dims (experts x d_ff)
+    # so the contraction dim (d_model) never needs an FSDP weight gather --
+    # the full-size f32 weight-grad that gather produces in backward was the
+    # dominant HBM buffer for jamba/mixtral (dry-run iteration log).
+    "moe_d": [("model",)],
+    # matching activation shardings inside moe_apply (expert buffers are
+    # token-replicated after the dispatch all-reduce, so f-over-data is free)
+    "experts_act": [("model",)],
+    "moe_f_act": [("data",)],
+    "ssm_inner": [("model",)],
+    "seq": [],                           # sequence stays unsharded (no CP here)
+    # sequence parallelism at block boundaries: the scan-over-blocks carry is
+    # the dominant live tensor under remat; sharding its seq dim over `model`
+    # divides boundary storage by the TP degree (GSPMD re-gathers inside the
+    # block where attention needs full sequence)
+    "seq_block": [("model",)],
+    "kv_seq": [("model",)],              # decode: flash-decoding style split
+    "embed": [],                         # activation d_model: unsharded
+    "stack": [],                         # scan-over-blocks leading axis
+}
+
+
+def _mesh_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _resolve(
+    logical: Optional[str], dim: int, mesh: Mesh, used: set[str],
+    exclude: Tuple[str, ...] = (),
+) -> Optional[Tuple[str, ...]]:
+    if logical is None:
+        return None
+    sizes = _mesh_sizes(mesh)
+    for cand in LOGICAL_RULES.get(logical, []):
+        if not all(a in sizes for a in cand):
+            continue
+        if any(a in used or a in exclude for a in cand):
+            continue
+        prod = 1
+        for a in cand:
+            prod *= sizes[a]
+        if prod and dim % prod == 0:
+            used.update(cand)
+            return cand
+    # partial fallback: "batch over (pod, data)" should still use data alone
+    # when pod is excluded/absent
+    for cand in LOGICAL_RULES.get(logical, []):
+        sub = tuple(a for a in cand if a in sizes and a not in used and a not in exclude)
+        if not sub or sub == cand:
+            continue
+        prod = 1
+        for a in sub:
+            prod *= sizes[a]
+        if prod and dim % prod == 0:
+            used.update(sub)
+            return sub
+    return None
+
+
+def logical_to_spec(
+    logical: Tuple[Optional[str], ...], shape: Tuple[int, ...], mesh: Mesh,
+    exclude: Tuple[str, ...] = (),
+) -> P:
+    """Resolve a tuple of logical names against a concrete shape + mesh."""
+    assert len(logical) == len(shape), (logical, shape)
+    used: set[str] = set()
+    parts = []
+    for name, dim in zip(logical, shape):
+        axes = _resolve(name, dim, mesh, used, exclude)
+        if axes is None:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(tuple(axes))
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Param-tree rules: leaf path regex -> logical axes (rightmost dims; leading
+# unmatched dims -- e.g. the scan-over-blocks stack axis -- replicate).
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    # embeddings / unembedding
+    (r"(^|/)embed$", ("vocab", "fsdp")),
+    (r"(^|/)lm_head$", ("fsdp", "vocab")),
+    # attention (fused head dims stay divisible even when H isn't)
+    (r"(^|/)wq$", ("fsdp", "qkv_fused")),
+    (r"(^|/)wk$", ("fsdp", "qkv_fused")),
+    (r"(^|/)wv$", ("fsdp", "qkv_fused")),
+    (r"(^|/)wo$", ("qkv_fused", "fsdp")),
+    (r"(^|/)b[qkv]$", ("qkv_fused",)),
+    # dense mlp
+    (r"(^|/)wi$", ("fsdp", "mlp")),
+    (r"(^|/)wo_mlp$", ("mlp", "fsdp")),
+    # moe
+    (r"(^|/)router$", (None, None)),
+    # (e -> model | d_model -> model when e indivisible | d_ff -> data):
+    # contractions hit only replicated-or-activation dims; weight grads stay
+    # sharded and the h tensor keeps one sharding across both einsums.
+    (r"(^|/)wi_moe$", ("experts", "moe_d", "fsdp")),
+    (r"(^|/)wo_moe$", ("experts", "fsdp", "moe_d")),
+    # mamba
+    (r"(^|/)in_proj$", ("fsdp", "ssm_inner")),
+    (r"(^|/)out_proj$", ("ssm_inner", "fsdp")),
+    (r"(^|/)x_proj$", ("ssm_inner", None)),
+    (r"(^|/)dt_proj$", (None, "ssm_inner")),
+    (r"(^|/)(a_log|d_skip|dt_bias|conv_w|conv_b)$", None),  # replicate
+    # xlstm
+    (r"(^|/)up$", ("fsdp", "ssm_inner")),
+    (r"(^|/)down$", ("ssm_inner", "fsdp")),
+    (r"(^|/)w[qkv]_m$", ("ssm_inner", None)),
+    (r"(^|/)(wi_g|wf_g|bi|bf|b)$", None),
+    (r"(^|/)wx$", ("fsdp", "mlp")),
+    (r"(^|/)r$", None),
+    (r"(^|/)ffn_up$", ("fsdp", "mlp")),
+    (r"(^|/)ffn_down$", ("mlp", "fsdp")),
+    # norms & leftovers
+    (r"(^|/)(ln\w*|scale|norm\w*)$", None),
+)
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one param leaf; unmatched paths replicate."""
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            if logical is None:
+                return P()
+            # right-align logical axes onto the trailing dims (stacked layers
+            # carry a leading scan axis)
+            pad = (None,) * (len(shape) - len(logical))
+            return logical_to_spec(pad + tuple(logical), shape, mesh)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh: Mesh):
+    """Tree of PartitionSpec matching a param tree (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(_path_str(path), leaf.shape, mesh), params
+    )

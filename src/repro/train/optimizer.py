@@ -1,0 +1,162 @@
+"""Optimizers: AdamW (configurable moment dtype) and Adafactor (factored
+second moments for the 100B+ configs), plus global-norm clipping and a
+warmup+cosine schedule.  Pure functions over param pytrees; optimizer state
+mirrors the param tree so the same partitioner rules shard it (ZeRO-style:
+moments are FSDP-sharded exactly like their params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "opt_init", "opt_update", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"   # bfloat16 halves optimizer HBM at >=100B
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def _schedule(step, oc: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return oc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw_init(params, oc: OptConfig):
+    dt = jnp.dtype(oc.moments_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+
+def _adamw_update(grads, opt, params, step, oc: OptConfig):
+    lr = _schedule(step, oc)
+    b1, b2 = oc.b1, oc.b2
+    t = step.astype(jnp.float32) + 1.0
+    corr = jnp.sqrt(1.0 - b2 ** t) / (1.0 - b1 ** t)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        u = corr * m_new / (jnp.sqrt(v_new) + oc.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    # flatten to avoid is_leaf tricks: superblocks are structural tuples
+    flat_g, td = jax.tree.flatten(grads)
+    out = [
+        upd(g, m, v, p)
+        for g, m, v, p in zip(
+            flat_g, jax.tree.leaves(opt["m"]), jax.tree.leaves(opt["v"]),
+            jax.tree.leaves(params),
+        )
+    ]
+    new_params = jax.tree.unflatten(td, [o[0] for o in out])
+    new_m = jax.tree.unflatten(td, [o[1] for o in out])
+    new_v = jax.tree.unflatten(td, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; first moment omitted, as in t5x default)
+# ---------------------------------------------------------------------------
+
+def _adafactor_init(params, oc: OptConfig):
+    def per_leaf(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(per_leaf, params)}
+
+
+def _adafactor_update(grads, opt, params, step, oc: OptConfig):
+    lr = _schedule(step, oc)
+    b2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, st, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if p.ndim >= 2:
+            vr = b2 * st["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * st["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = (
+                vr[..., None]
+                * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30)
+            )
+            u = gf * jax.lax.rsqrt(denom + 1e-30)
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * st["v"] + (1 - b2) * g2
+            u = gf * jax.lax.rsqrt(v + 1e-30)
+            new_st = {"v": v}
+        # update clipping (Adafactor's d=1.0 RMS rule)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        if p.ndim >= 2:
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        return p_new.astype(p.dtype), new_st
+
+    # factored state nests one dict below each param leaf: flatten up-to params
+    flat_g, td = jax.tree.flatten(grads)
+    flat_f = td.flatten_up_to(opt["f"])
+    flat_p = td.flatten_up_to(params)
+    out = [upd(g, st, p) for g, st, p in zip(flat_g, flat_f, flat_p)]
+    new_params = jax.tree.unflatten(td, [o[0] for o in out])
+    new_f = jax.tree.unflatten(td, [o[1] for o in out])
+    return new_params, {"f": new_f}
+
+
+def opt_init(params, oc: OptConfig):
+    if oc.name == "adamw":
+        return _adamw_init(params, oc)
+    if oc.name == "adafactor":
+        return _adafactor_init(params, oc)
+    raise ValueError(oc.name)
+
+
+def opt_update(grads, opt, params, step, oc: OptConfig):
+    if oc.name == "adamw":
+        return _adamw_update(grads, opt, params, step, oc)
+    if oc.name == "adafactor":
+        return _adafactor_update(grads, opt, params, step, oc)
+    raise ValueError(oc.name)

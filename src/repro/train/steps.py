@@ -1,0 +1,185 @@
+"""Jittable train/serve steps + state construction and sharding specs.
+
+``make_train_step`` closes over the model config and optimizer config and
+returns the pure step function the launcher jits with explicit in/out
+shardings.  ``make_compressed_train_step`` is the beyond-paper variant: the
+whole step runs under ``shard_map`` manual on the ``pod`` axis (data/model
+stay GSPMD-auto), so the cross-pod gradient exchange becomes an *explicit*
+int8 quantized psum with error feedback -- 4x fewer wire bytes on the
+pod-to-pod hop, visible in the dry-run HLO (EXPERIMENTS.md Sec. Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import decode_step as _decode_step
+from repro.models import init_params, loss_fn
+from repro.train.optimizer import OptConfig, clip_by_global_norm, opt_init, opt_update
+
+__all__ = [
+    "init_train_state", "make_train_step", "make_compressed_train_step",
+    "make_serve_step", "quantized_psum_mean",
+]
+
+
+def init_train_state(key, cfg, oc: OptConfig) -> Dict[str, Any]:
+    params = init_params(key, cfg)
+    return {
+        "params": params,
+        "opt": opt_init(params, oc),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(cfg, oc: OptConfig, *, remat: bool = True,
+                    accum_steps: int = 1):
+    """``accum_steps`` > 1 scans over microbatches accumulating f32 grads --
+    the standard memory lever for the 100B+ configs (activation temps scale
+    with the microbatch, the accumulator costs one param-sized f32 tree)."""
+
+    def grad_fn(params, batch):
+        def lf(p):
+            return loss_fn(p, cfg, batch, remat=remat)
+
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / accum_steps,
+                    acc, g,
+                )
+                return acc, (l, m)
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, (losses, ms) = jax.lax.scan(body, acc0, micro)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+        grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+        new_params, new_opt = opt_update(
+            grads, state["opt"], params, state["step"], oc
+        )
+        new_state = {
+            "params": new_params, "opt": new_opt, "step": state["step"] + 1,
+        }
+        return new_state, {"loss": loss, "grad_norm": gnorm, **metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# int8 cross-pod gradient exchange (beyond-paper; SymED's tolerance idea
+# generalized to the collective layer: bounded-error lossy wire format)
+# ---------------------------------------------------------------------------
+
+def quantized_psum_mean(tree, axis_name: str, n: int, error_fb=None):
+    """Mean-psum over ``axis_name`` in int8 with a shared per-leaf scale.
+
+    Two collectives per leaf: a scalar max-psum (scale agreement) and the int8
+    sum.  Returns (mean_tree, new_error_fb): ``error_fb`` carries the local
+    quantization residual into the next step (error feedback).
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + (0.0 if e is None else e.astype(jnp.float32))
+        amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        resid = gf - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+        return mean, resid.astype(jnp.bfloat16)
+
+    flat_g, td = jax.tree.flatten(tree)
+    flat_e = td.flatten_up_to(error_fb) if error_fb is not None else [None] * len(flat_g)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(td, [o[0] for o in out]),
+        jax.tree.unflatten(td, [o[1] for o in out]),
+    )
+
+
+def make_compressed_train_step(cfg, oc: OptConfig, mesh, *, remat: bool = True):
+    """Train step with explicit int8 cross-pod gradient all-reduce.
+
+    Requires a mesh with a ``pod`` axis.  Inside the shard_map body each pod
+    computes gradients over its own batch shard (data/model axes remain
+    GSPMD-auto); the pod axis is manual so the gradient exchange is ours.
+    """
+    assert "pod" in mesh.axis_names, "compressed step needs the multi-pod mesh"
+    npods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+    auto = frozenset(a for a in mesh.axis_names if a != "pod")
+
+    def body(state, batch):
+        def lf(p):
+            return loss_fn(p, cfg, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        grads, efb = quantized_psum_mean(
+            grads, "pod", npods, error_fb=state.get("error_fb")
+        )
+        grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+        new_params, new_opt = opt_update(
+            grads, state["opt"], state["params"], state["step"], oc
+        )
+        new_state = {
+            "params": new_params, "opt": new_opt, "step": state["step"] + 1,
+            "error_fb": efb,
+        }
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"),
+                               {"loss": loss, "grad_norm": gnorm, **metrics})
+        return new_state, metrics
+
+    def train_step(state, batch):
+        state_specs = jax.tree.map(lambda _: P(), state)
+        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        out_specs = (
+            jax.tree.map(lambda _: P(), state), jax.tree.map(lambda _: P(), {
+                "loss": 0, "grad_norm": 0, "xent": 0, "aux": 0,
+            }),
+        )
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=(state_specs, batch_specs),
+            out_specs=out_specs, check_vma=False, axis_names=frozenset({"pod"}),
+        )(state, batch)
+
+    return train_step
+
+
+def init_error_fb(params):
+    """Zeroed error-feedback buffers (bf16) for the compressed step."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg, *, temperature: float = 0.0):
+    def serve_step(params, state, token, key=None):
+        logits, new_state = _decode_step(params, cfg, state, token)
+        if temperature > 0.0 and key is not None:
+            next_tok = jax.random.categorical(key, logits[:, -1] / temperature)
+            next_tok = next_tok[:, None].astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+
+    return serve_step

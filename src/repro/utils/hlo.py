@@ -1,0 +1,244 @@
+"""Optimized-HLO introspection: collective inventory + roofline terms.
+
+``cost_analysis()`` has FLOPs and HBM bytes but no collective traffic -- and
+(verified empirically, see EXPERIMENTS.md Sec. Dry-run) XLA's cost analysis
+counts a while/scan body ONCE, not times its trip count.  Collectives inside
+the scan-over-blocks would therefore be undercounted by n_blocks.  This parser
+fixes that:
+
+  1. split the module into computations,
+  2. find every while op, resolve its trip count from the constant operand of
+     the compare in its condition computation,
+  3. propagate multipliers through the call graph (body=, calls=, to_apply=,
+     branch_computations=),
+  4. weight each collective's wire bytes by its computation's multiplier.
+
+Wire bytes per device per op (ring algorithms, group size g):
+
+    all-reduce       2 * R * (g-1)/g
+    all-gather           R * (g-1)/g      (R = gathered result)
+    reduce-scatter       R * (g-1)        (R = scattered shard)
+    all-to-all           R * (g-1)/g
+    collective-permute   R
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+__all__ = [
+    "parse_collectives", "collective_wire_bytes", "roofline_terms", "HW",
+    "split_computations", "while_trip_counts",
+]
+
+# TPU v5e constants (per spec)
+HW = {
+    "peak_flops": 197e12,      # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s*(\w+)\[([0-9,]*)\][^=]*?\s(all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute)(?:-start)?\(",
+)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(",
+)
+_GROUP_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# headers sit at column 0: ``%name (args...) -> type {`` (args may nest parens)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\(.*?\)\s*,\s*condition=(%?[\w\.\-]+)\s*,\s*body=(%?[\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=(%?[\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"(%?[\w\.\-]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+_COMPARE_RE = re.compile(r"compare\(([^)]*)\)")
+
+
+def split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Map computation name -> its lines (headers at column 0, ``-> ... {``)."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        is_hdr = (
+            line and not line[0].isspace() and "->" in line
+            and line.rstrip().endswith("{")
+        )
+        m = _COMP_HDR_RE.match(line.strip()) if is_hdr else None
+        if m:
+            current = m.group(1).lstrip("%")
+            comps[current] = []
+        elif current is not None:
+            if line.startswith("}"):
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def _entry_name(hlo_text: str) -> str:
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line[len("ENTRY"):].strip())
+            if m:
+                return m.group(1).lstrip("%")
+    return ""
+
+
+def while_trip_counts(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """body-computation name -> trip count (best-effort; default 1)."""
+    trips: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1).lstrip("%"), m.group(2).lstrip("%")
+            trips[body] = max(trips.get(body, 1), _trip_from_cond(comps.get(cond, [])))
+    return trips
+
+
+def _trip_from_cond(cond_lines: List[str]) -> int:
+    consts = dict(
+        (m.group(1).lstrip("%"), int(m.group(2)))
+        for line in cond_lines for m in _CONST_RE.finditer(line)
+    )
+    best = 1
+    for line in cond_lines:
+        m = _COMPARE_RE.search(line)
+        if not m:
+            continue
+        for opn in re.findall(r"%([\w\.\-]+)", m.group(1)):
+            if opn in consts:
+                best = max(best, consts[opn])
+    if best == 1 and consts:
+        best = max(consts.values())
+    return best
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: str) -> Dict[str, float]:
+    trips = while_trip_counts(comps)
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps[name]:
+            is_while = _WHILE_RE.search(line)
+            callees = [c.lstrip("%") for c in _CALL_RE.findall(line)]
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                callees += [c.strip().lstrip("%") for c in bm.group(1).split(",")]
+            for c in callees:
+                if c == name:
+                    continue
+                factor = trips.get(c, 1) if is_while else 1
+                visit(c, m * factor)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_ITOA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _line_collective(line: str):
+    if not any(op in line for op in _COLL_OPS):
+        return None
+    if "-done" in line:  # async pair: count the -start only
+        return None
+    m = _COLL_RE.search(line)
+    if m:
+        return {"op": m.group(3), "result_bytes": _shape_bytes(m.group(1), m.group(2)),
+                "group": _group_size(line)}
+    m = _TUPLE_COLL_RE.search(line)
+    if m:
+        rbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1)))
+        return {"op": m.group(2), "result_bytes": rbytes, "group": _group_size(line)}
+    return None
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """Collectives with while-trip multipliers applied (``count`` may be >1)."""
+    comps = split_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+    mult = _multipliers(comps, entry) if entry else {}
+    out: List[Dict] = []
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            c = _line_collective(line)
+            if c:
+                c["count"] = m
+                out.append(c)
+    if not out:  # fallback: flat scan (shouldn't happen)
+        for line in hlo_text.splitlines():
+            c = _line_collective(line)
+            if c:
+                c["count"] = 1.0
+                out.append(c)
+    return out
+
+
+def collective_wire_bytes(colls: List[Dict]) -> float:
+    total = 0.0
+    for c in colls:
+        r, g = c["result_bytes"], max(c["group"], 1)
+        n = c.get("count", 1.0)
+        if c["op"] == "all-reduce":
+            total += n * 2.0 * r * (g - 1) / g
+        elif c["op"] == "all-gather":
+            total += n * r * (g - 1) / g
+        elif c["op"] == "reduce-scatter":
+            total += n * r * (g - 1)
+        elif c["op"] == "all-to-all":
+            total += n * r * (g - 1) / g
+        elif c["op"] == "collective-permute":
+            total += n * r
+    return total
+
+
+def roofline_terms(
+    flops_per_dev: float, hbm_bytes_per_dev: float, wire_bytes_per_dev: float,
+) -> Dict[str, float]:
+    """Three roofline terms in seconds (all inputs per device)."""
+    compute_s = flops_per_dev / HW["peak_flops"]
+    memory_s = hbm_bytes_per_dev / HW["hbm_bw"]
+    collective_s = wire_bytes_per_dev / HW["ici_bw"]
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }

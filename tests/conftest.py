@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design -- smoke tests and
+benches must see the real single CPU device; only the dry-run entrypoint
+forces 512 host devices (and multi-device tests spawn subprocesses)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_stream(rng, n=400, kind="mixed"):
+    t = np.linspace(0, 12, n)
+    if kind == "mixed":
+        x = np.cumsum(rng.normal(0, 0.3, n)) + 2.0 * np.sin(t)
+    elif kind == "sine":
+        x = np.sin(t) + rng.normal(0, 0.05, n)
+    elif kind == "walk":
+        x = np.cumsum(rng.normal(0, 1.0, n))
+    else:
+        raise ValueError(kind)
+    return x.astype(np.float32)

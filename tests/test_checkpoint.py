@@ -1,0 +1,109 @@
+"""Checkpoint system: atomicity, roundtrip, elastic resharding, GC."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (
+    CheckpointManager, latest_step, restore_checkpoint, save_checkpoint,
+)
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {
+            "embed": jax.random.normal(k, (64, 16)),
+            "blocks": (
+                {"wq": jax.random.normal(k, (4, 16, 16)), "ln1": jnp.ones((4, 16))},
+            ),
+        },
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+class TestRoundtrip:
+    def test_save_restore_exact(self, tmp_path):
+        state = _state()
+        save_checkpoint(tmp_path, 7, state)
+        restored, manifest = restore_checkpoint(tmp_path, 7, state)
+        assert manifest["step"] == 7
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_restore_into_abstract_target(self, tmp_path):
+        state = _state()
+        save_checkpoint(tmp_path, 1, state)
+        target = jax.eval_shape(lambda: _state())
+        restored, _ = restore_checkpoint(tmp_path, 1, target)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["embed"]),
+            np.asarray(state["params"]["embed"]))
+
+    def test_latest_and_gc(self, tmp_path):
+        state = _state()
+        for s in (10, 20, 30, 40):
+            save_checkpoint(tmp_path, s, state, keep=2)
+        assert latest_step(tmp_path) == 40
+        kept = sorted(p.name for p in tmp_path.glob("ckpt_*"))
+        assert kept == ["ckpt_00000030", "ckpt_00000040"]
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        save_checkpoint(tmp_path, 5, _state())
+        assert not list(tmp_path.glob(".tmp-*"))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_checkpoint(tmp_path, 3, _state())
+        bad = _state()
+        bad["params"]["embed"] = jnp.zeros((65, 16))
+        with pytest.raises(ValueError, match="shape"):
+            restore_checkpoint(tmp_path, 3, bad)
+
+    def test_manager_resume(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, every=2)
+        state = _state()
+        assert mgr.maybe_save(1, state) is None
+        assert mgr.maybe_save(2, state) is not None
+        restored, manifest = mgr.restore_latest(state)
+        assert manifest["step"] == 2
+
+    def test_empty_dir_restore(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        restored, manifest = mgr.restore_latest(_state())
+        assert restored is None and manifest is None
+
+
+class TestElasticReshard:
+    """Restore onto a different device layout (subprocess: needs >1 device)."""
+
+    def test_reshard_subprocess(self, tmp_path):
+        import subprocess
+        import sys
+
+        code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.ckpt import save_checkpoint, restore_checkpoint
+
+state = {{"w": jnp.arange(64.0).reshape(8, 8)}}
+save_checkpoint(r"{tmp_path}", 1, state)
+
+# "new cluster": restore onto a 4-device mesh (elastic downsize), sharded
+mesh = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4],
+                     axis_types=(jax.sharding.AxisType.Auto,))
+shard = {{"w": NamedSharding(mesh, P("data", None))}}
+restored, _ = restore_checkpoint(r"{tmp_path}", 1, state, shardings=shard)
+assert restored["w"].sharding.num_devices == 4
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+print("RESHARD_OK")
+"""
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, env=env, cwd=os.path.dirname(
+                                 os.path.dirname(os.path.abspath(__file__))))
+        assert "RESHARD_OK" in out.stdout, out.stderr[-2000:]

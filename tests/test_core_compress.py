@@ -1,0 +1,144 @@
+"""Sender-side unit + property tests (paper Alg. 1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compress import (
+    _bridge_error_raw, bridge_error_direct, compress_stream,
+)
+from repro.core.normalize import ewm_scan
+from repro.core.receiver import compact_events
+
+from conftest import make_stream
+
+
+class TestBridgeError:
+    """O(1) incremental bridge error == O(m) direct recompute (exact)."""
+
+    @given(st.lists(st.floats(-100, 100), min_size=3, max_size=64))
+    @settings(max_examples=60, deadline=None)
+    def test_incremental_matches_direct(self, vals):
+        seg = np.asarray(vals, np.float32)
+        v = seg - seg[0]
+        h = np.arange(len(seg), dtype=np.float64)
+        s0, s1, s2 = v.sum(), (h * v).sum(), (v * v).sum()
+        e_inc = float(_bridge_error_raw(
+            jnp.float32(s0), jnp.float32(s1), jnp.float32(s2),
+            jnp.float32(v[-1]), jnp.float32(len(seg) - 1)))
+        e_dir = float(bridge_error_direct(jnp.asarray(seg)))
+        assert e_inc == pytest.approx(e_dir, rel=1e-3, abs=1e-2)
+
+    def test_line_has_zero_error(self):
+        seg = jnp.linspace(0.0, 5.0, 33)
+        assert float(bridge_error_direct(seg)) < 1e-6
+
+    def test_error_affine_invariance(self, rng):
+        """Bridge residual: shift-invariant, scales with sigma^2 -- the
+        identity that makes err_norm = err_raw / EWMV exact."""
+        seg = jnp.asarray(rng.normal(0, 1, 21), jnp.float32)
+        base = float(bridge_error_direct(seg))
+        shifted = float(bridge_error_direct(seg + 37.5))
+        scaled = float(bridge_error_direct(3.0 * seg))
+        assert shifted == pytest.approx(base, rel=1e-3, abs=1e-3)
+        assert scaled == pytest.approx(9.0 * base, rel=1e-3)
+
+
+class TestNormalize:
+    def test_paper_initialization(self, rng):
+        ts = jnp.asarray(make_stream(rng, 50))
+        m, v = ewm_scan(ts, 0.02)
+        assert float(m[0]) == pytest.approx(float(ts[0]))
+        assert float(v[0]) == 1.0
+
+    def test_matches_numpy_recurrence(self, rng):
+        ts = make_stream(rng, 200)
+        m, v = ewm_scan(jnp.asarray(ts), 0.05)
+        em, ev = ts[0], 1.0
+        for j in range(1, len(ts)):
+            em = 0.05 * ts[j] + 0.95 * em
+            ev = 0.05 * (ts[j] - em) ** 2 + 0.95 * ev
+        assert float(m[-1]) == pytest.approx(em, rel=1e-4)
+        assert float(v[-1]) == pytest.approx(ev, rel=1e-4)
+
+    @given(st.floats(0.01, 0.3))
+    @settings(max_examples=20, deadline=None)
+    def test_constant_stream_converges(self, alpha):
+        ts = jnp.full((100,), 5.0)
+        m, v = ewm_scan(ts, alpha)
+        assert float(m[-1]) == pytest.approx(5.0, rel=1e-4)
+        assert float(v[-1]) < 1.0  # decays from init toward 0
+
+
+class TestCompression:
+    def test_piece_chain_covers_stream(self, rng):
+        ts = make_stream(rng, 500)
+        ev = compress_stream(jnp.asarray(ts), tol=0.4, len_max=128, alpha=0.02)
+        wire = compact_events(ev, n_max=256, t0=jnp.float32(ts[0]))
+        n = int(wire["n_pieces"])
+        lens = np.asarray(wire["lengths"])[:n]
+        assert lens.sum() == len(ts) - 1      # polygonal chain spans T
+        assert (lens >= 1).all()
+
+    def test_receiver_reconstructs_sender_pieces(self, rng):
+        """Alg. 2: arrival-gap lengths + endpoint-diff increments are exact."""
+        ts = make_stream(rng, 400)
+        ev = compress_stream(jnp.asarray(ts), tol=0.4, len_max=64, alpha=0.02)
+        wire = compact_events(ev, n_max=256, t0=jnp.float32(ts[0]))
+        emit = np.asarray(ev["emit"])
+        gt_len = np.asarray(ev["length"])[emit]
+        gt_inc = np.asarray(ev["inc"])[emit]
+        n = len(gt_len)
+        np.testing.assert_array_equal(np.asarray(wire["lengths"])[:n], gt_len)
+        np.testing.assert_allclose(np.asarray(wire["incs"])[:n], gt_inc, atol=1e-5)
+
+    def test_tolerance_monotonicity(self, rng):
+        """Lower tol => more pieces (paper Fig. 5 premise)."""
+        ts = jnp.asarray(make_stream(rng, 800))
+        counts = []
+        for tol in (0.1, 0.5, 1.5):
+            ev = compress_stream(ts, tol=tol, len_max=512, alpha=0.01)
+            counts.append(int(ev["n_pieces"]))
+        assert counts[0] >= counts[1] >= counts[2]
+        assert counts[0] > counts[2]
+
+    def test_len_max_bound(self, rng):
+        ts = jnp.asarray(np.zeros(300, np.float32))  # flat: only len_max cuts
+        ev = compress_stream(ts, tol=0.5, len_max=32, alpha=0.02)
+        wire = compact_events(ev, n_max=64, t0=jnp.float32(0))
+        lens = np.asarray(wire["lengths"])[: int(wire["n_pieces"])]
+        assert lens.max() <= 32
+
+    def test_batched_matches_single(self, rng):
+        streams = np.stack([make_stream(rng, 300) for _ in range(4)])
+        ev_b = compress_stream(jnp.asarray(streams), tol=0.4, len_max=64, alpha=0.02)
+        for i in range(4):
+            ev_1 = compress_stream(jnp.asarray(streams[i]), tol=0.4, len_max=64,
+                                   alpha=0.02)
+            np.testing.assert_array_equal(
+                np.asarray(ev_b["emit"][i]), np.asarray(ev_1["emit"]))
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_determinism(self, seed):
+        ts = jnp.asarray(make_stream(np.random.default_rng(seed), 200))
+        a = compress_stream(ts, tol=0.3, len_max=64, alpha=0.02)
+        b = compress_stream(ts, tol=0.3, len_max=64, alpha=0.02)
+        assert int(a["n_pieces"]) == int(b["n_pieces"])
+        np.testing.assert_array_equal(np.asarray(a["emit"]), np.asarray(b["emit"]))
+
+    @given(st.floats(1.5, 200.0), st.floats(-50.0, 50.0))
+    @settings(max_examples=20, deadline=None)
+    def test_scale_shift_equivariance(self, scale, shift):
+        """Online z-normalization makes segmentation scale/shift invariant
+        (the reason the sender normalizes at all).  EWMV_0 = 1.0 is an
+        *absolute* init, so equivariance only holds once the damped window
+        adapts -- compare after warmup (paper Sec. 4.2 notes the same
+        early-stream transient)."""
+        ts = make_stream(np.random.default_rng(7), 300)
+        a = compress_stream(jnp.asarray(ts), tol=0.4, len_max=64, alpha=0.02)
+        b = compress_stream(jnp.asarray(ts * scale + shift), tol=0.4,
+                            len_max=64, alpha=0.02)
+        ea, eb = np.asarray(a["emit"])[100:], np.asarray(b["emit"])[100:]
+        assert (ea != eb).mean() < 0.05

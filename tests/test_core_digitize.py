@@ -1,0 +1,157 @@
+"""Receiver-side digitization + reconstruction tests (paper Alg. 2/3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SymEDConfig, abba_encode, digitize_pieces, dtw_ref,
+    reconstruct_from_pieces, reconstruct_from_symbols, symed_encode,
+)
+from repro.core.digitize import masked_kmeans, max_cluster_variance, scale_coords
+from repro.core.metrics import compression_rate_abba, compression_rate_symed, drr
+from repro.core.reconstruct import quantize_lengths
+
+from conftest import make_stream
+
+
+def _encode(rng, n=500, tol=0.4, **kw):
+    cfg = SymEDConfig(tol=tol, alpha=0.02, n_max=256, k_max=32, len_max=128, **kw)
+    ts = jnp.asarray(make_stream(rng, n))
+    return ts, cfg, symed_encode(ts, cfg, jax.random.key(0))
+
+
+class TestDigitize:
+    def test_labels_within_alphabet(self, rng):
+        _, _, out = _encode(rng)
+        n, k = int(out["n_pieces"]), int(out["k"])
+        labels = np.asarray(out["symbols"])[:n]
+        assert k >= 1 and (labels >= 0).all() and (labels < k).all()
+
+    def test_kmin_respected(self, rng):
+        _, _, out = _encode(rng)
+        assert int(out["k"]) >= min(3, int(out["n_pieces"]))
+
+    def test_kmax_bounds_alphabet(self, rng):
+        ts = jnp.asarray(make_stream(rng, 800))
+        cfg = SymEDConfig(tol=0.05, alpha=0.02, n_max=512, k_max=8, len_max=64)
+        out = symed_encode(ts, cfg, jax.random.key(0))
+        assert int(out["k"]) <= 8
+
+    def test_variance_bound_or_limits(self, rng):
+        """After digitization: max cluster variance <= tol^2 OR k hit a limit."""
+        ts, cfg, out = _encode(rng)
+        n, k = int(out["n_pieces"]), int(out["k"])
+        pieces = jnp.stack([out["pieces_len"].astype(jnp.float32),
+                            out["pieces_inc"]], -1)
+        mask = jnp.arange(pieces.shape[0]) < n
+        scales, coords = scale_coords(pieces, mask, jnp.float32(cfg.scl))
+        centers = out["centers"] * scales[None, :]
+        err = float(max_cluster_variance(coords, mask,
+                                         centers, out["symbols"], jnp.int32(k)))
+        assert err <= cfg.tol ** 2 + 1e-3 or k >= min(cfg.k_max, n)
+
+    def test_masked_kmeans_assigns_nearest(self, rng):
+        pts = jnp.asarray(rng.normal(size=(40, 2)), jnp.float32)
+        mask = jnp.ones((40,), bool)
+        c0 = pts[:4]
+        c, lab = masked_kmeans(pts, mask, jnp.pad(c0, ((0, 4), (0, 0))),
+                               jnp.int32(4), iters=10)
+        d = jnp.sum((pts[:, None] - c[None, :4]) ** 2, -1)
+        np.testing.assert_array_equal(np.asarray(lab), np.asarray(jnp.argmin(d, 1)))
+
+
+class TestReconstruction:
+    def test_pieces_beat_symbols(self, rng):
+        """Paper headline: online (piece) reconstruction has lower DTW error
+        than symbol reconstruction -- averaged over streams."""
+        diffs = []
+        for i in range(6):
+            _, _, out = _encode(np.random.default_rng(i))
+            diffs.append(float(out["re_symbols"]) - float(out["re_pieces"]))
+        assert np.mean(diffs) > 0
+
+    def test_reconstruction_length(self, rng):
+        ts, _, out = _encode(rng, n=500)
+        assert out["recon_pieces"].shape == ts.shape
+        assert out["recon_symbols"].shape == ts.shape
+
+    def test_piece_reconstruction_hits_endpoints(self, rng):
+        """Interpolated chain passes through every transmitted endpoint."""
+        ts, cfg, out = _encode(rng, n=300)
+        rec = np.asarray(out["recon_pieces"])
+        n = int(out["n_pieces"])
+        lens = np.asarray(out["pieces_len"])[:n]
+        incs = np.asarray(out["pieces_inc"])[:n]
+        pos = np.cumsum(lens)
+        vals = float(ts[0]) + np.cumsum(incs)
+        for p, v in zip(pos, vals):
+            assert rec[p] == pytest.approx(v, abs=1e-3)
+
+    def test_tol_controls_error(self, rng):
+        """Looser tol => worse (or equal) piece reconstruction, fewer pieces."""
+        ts = jnp.asarray(make_stream(rng, 800))
+        res = {}
+        for tol in (0.1, 1.0):
+            cfg = SymEDConfig(tol=tol, alpha=0.02, n_max=512, k_max=32, len_max=256)
+            res[tol] = symed_encode(ts, cfg, jax.random.key(0))
+        assert int(res[0.1]["n_pieces"]) > int(res[1.0]["n_pieces"])
+        assert float(res[0.1]["re_pieces"]) <= float(res[1.0]["re_pieces"]) + 1e-3
+
+    @given(st.lists(st.floats(0.5, 30.0), min_size=2, max_size=40))
+    @settings(max_examples=30, deadline=None)
+    def test_quantize_lengths_preserves_total(self, lens):
+        arr = jnp.asarray(lens, jnp.float32)
+        mask = jnp.ones((len(lens),), bool)
+        q = np.asarray(quantize_lengths(arr, mask))
+        assert (q >= 1).all()
+        # ABBA cumulative rounding: total drifts < 1 from the real sum
+        assert abs(q.sum() - float(np.asarray(arr).sum())) <= len(lens) * 0.5 + 1
+
+
+class TestMetrics:
+    def test_dtw_identity_and_symmetry(self, rng):
+        x = jnp.asarray(make_stream(rng, 120))
+        y = jnp.asarray(make_stream(np.random.default_rng(5), 120))
+        assert float(dtw_ref(x, x)) == pytest.approx(0.0, abs=1e-3)
+        assert float(dtw_ref(x, y)) == pytest.approx(float(dtw_ref(y, x)), rel=1e-5)
+
+    def test_dtw_leq_euclidean(self, rng):
+        x = jnp.asarray(make_stream(rng, 100))
+        y = x + jnp.asarray(np.random.default_rng(1).normal(0, 0.1, 100), jnp.float32)
+        eu = float(jnp.sqrt(jnp.sum((x - y) ** 2)))
+        assert float(dtw_ref(x, y)) <= eu + 1e-4
+
+    def test_cr_formulas(self):
+        # CR_SymED = n/N (one float per piece vs float per point)
+        assert float(compression_rate_symed(jnp.int32(50), 1000)) == pytest.approx(0.05)
+        # CR_ABBA = (8k + n) / 4N
+        assert float(compression_rate_abba(jnp.int32(50), jnp.int32(5), 1000)) == \
+            pytest.approx((8 * 5 + 50) / 4000)
+        assert float(drr(jnp.int32(50), 1000)) == pytest.approx(0.05)
+
+    def test_symed_cr_equals_drr(self, rng):
+        _, _, out = _encode(rng)
+        assert float(out["cr"]) == pytest.approx(float(out["drr"]))
+
+
+class TestABBABaseline:
+    def test_abba_pieces_cover_stream(self, rng):
+        ts = jnp.asarray(make_stream(rng, 600))
+        res = abba_encode(ts, n_max=256, tol=0.4, len_max=128, k_max=32)
+        n = int(res.n_pieces)
+        assert np.asarray(res.lengths)[:n].sum() == 599
+        assert int(res.k) >= 3
+
+    def test_abba_better_cr_than_symed(self, rng):
+        """Paper Fig. 5b: ABBA transmits symbols+centers -> lower CR."""
+        vals = []
+        for i in range(4):
+            ts = jnp.asarray(make_stream(np.random.default_rng(i), 800))
+            res = abba_encode(ts, n_max=512, tol=0.5, len_max=256, k_max=32)
+            cfg = SymEDConfig(tol=0.5, alpha=0.02, n_max=512, k_max=32, len_max=256)
+            out = symed_encode(ts, cfg, jax.random.key(0), reconstruct=False)
+            cr_abba = float(compression_rate_abba(res.n_pieces, res.k, 800))
+            vals.append((cr_abba, float(out["cr"])))
+        assert np.mean([a for a, s in vals]) < np.mean([s for a, s in vals])

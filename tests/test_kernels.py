@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+class TestEwmaKernel:
+    @pytest.mark.parametrize("b,t", [(1, 64), (3, 300), (8, 1024), (17, 257), (256, 96)])
+    @pytest.mark.parametrize("alpha", [0.01, 0.05, 0.2])
+    def test_matches_ref(self, b, t, alpha):
+        ts = jnp.asarray(RNG.normal(0, 2, (b, t)), jnp.float32)
+        m1, v1 = ops.ewma_scan(ts, alpha)
+        m2, v2 = ref.ewma_scan_ref(ts, alpha)
+        np.testing.assert_allclose(m1, m2, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(v1, v2, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("block_t", [64, 128, 512])
+    def test_block_shapes(self, block_t):
+        from repro.kernels.ewma import ewma_scan_pallas
+
+        ts = jnp.asarray(RNG.normal(0, 1, (4, 777)), jnp.float32)
+        m1, v1 = ewma_scan_pallas(ts, 0.02, block_t=block_t, interpret=True)
+        m2, v2 = ref.ewma_scan_ref(ts, 0.02)
+        np.testing.assert_allclose(m1, m2, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(v1, v2, rtol=2e-4, atol=2e-4)
+
+    def test_paper_init(self):
+        ts = jnp.asarray(RNG.normal(0, 1, (2, 50)), jnp.float32)
+        m, v = ops.ewma_scan(ts, 0.02)
+        np.testing.assert_allclose(m[:, 0], ts[:, 0], rtol=1e-6)
+        np.testing.assert_allclose(v[:, 0], 1.0, rtol=1e-6)
+
+    def test_large_values(self):
+        """Chunked rescaling keeps f32 precision for offset streams."""
+        ts = jnp.asarray(RNG.normal(1000, 5, (2, 512)), jnp.float32)
+        m1, v1 = ops.ewma_scan(ts, 0.05)
+        m2, v2 = ref.ewma_scan_ref(ts, 0.05)
+        np.testing.assert_allclose(m1, m2, rtol=1e-4)
+        np.testing.assert_allclose(v1, v2, rtol=1e-3, atol=1e-2)
+
+
+class TestKmeansKernel:
+    @pytest.mark.parametrize("s,n,d,k", [
+        (1, 16, 2, 3), (3, 50, 2, 7), (2, 200, 2, 100), (1, 64, 8, 5),
+        (2, 128, 128, 16), (1, 300, 2, 1),
+    ])
+    def test_matches_ref(self, s, n, d, k):
+        x = jnp.asarray(RNG.normal(size=(s, n, d)), jnp.float32)
+        mask = jnp.asarray(RNG.random((s, n)) > 0.25, jnp.float32)
+        c = jnp.asarray(RNG.normal(size=(s, k, d)), jnp.float32)
+        act = jnp.asarray(RNG.random((s, k)) > 0.2, jnp.float32)
+        act = act.at[:, 0].set(1.0)  # at least one active center
+        l1, s1, c1 = ops.kmeans_assign(x, mask, c, act)
+        l2, s2, c2 = ref.kmeans_assign_ref(x, mask, c, act)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-6)
+
+    def test_block_n_tiling(self):
+        from repro.kernels.kmeans import kmeans_assign_pallas
+
+        x = jnp.asarray(RNG.normal(size=(2, 500, 2)), jnp.float32)
+        mask = jnp.ones((2, 500), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=(2, 10, 2)), jnp.float32)
+        act = jnp.ones((2, 10), jnp.float32)
+        l1, s1, c1 = kmeans_assign_pallas(x, mask, c, act, block_n=128,
+                                          interpret=True)
+        l2, s2, c2 = ref.kmeans_assign_ref(x, mask, c, act)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-5)
+
+    def test_lloyd_step_contract(self):
+        """new_centers from (sums, counts) must equal masked means."""
+        x = jnp.asarray(RNG.normal(size=(1, 80, 2)), jnp.float32)
+        mask = jnp.ones((1, 80), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=(1, 4, 2)), jnp.float32)
+        act = jnp.ones((1, 4), jnp.float32)
+        labels, sums, counts = ops.kmeans_assign(x, mask, c, act)
+        for j in range(4):
+            sel = np.asarray(labels[0]) == j
+            if sel.any():
+                np.testing.assert_allclose(
+                    np.asarray(sums[0, j] / counts[0, j]),
+                    np.asarray(x[0])[sel].mean(0), rtol=1e-4)
+
+
+class TestDtwKernel:
+    @pytest.mark.parametrize("b,n", [(1, 32), (4, 150), (8, 128), (3, 257), (16, 64)])
+    def test_matches_ref_full(self, b, n):
+        x = jnp.asarray(RNG.normal(size=(b, n)).cumsum(1), jnp.float32)
+        y = x + jnp.asarray(RNG.normal(0, 0.3, (b, n)), jnp.float32)
+        d1 = ops.dtw(x, y)
+        d2 = ref.dtw_batch_ref(x, y)
+        np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("band", [5, 20, 64])
+    def test_matches_ref_banded(self, band):
+        x = jnp.asarray(RNG.normal(size=(4, 200)).cumsum(1), jnp.float32)
+        y = x + jnp.asarray(RNG.normal(0, 0.2, (4, 200)), jnp.float32)
+        d1 = ops.dtw(x, y, band=band)
+        d2 = ref.dtw_batch_ref(x, y, band=band)
+        np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+
+    def test_identity_zero(self):
+        x = jnp.asarray(RNG.normal(size=(3, 90)), jnp.float32)
+        np.testing.assert_allclose(ops.dtw(x, x), 0.0, atol=1e-4)
+
+    def test_band_tightens_distance(self):
+        """Narrower band restricts warping -> distance monotone non-decreasing."""
+        x = jnp.asarray(RNG.normal(size=(2, 100)).cumsum(1), jnp.float32)
+        y = jnp.asarray(RNG.normal(size=(2, 100)).cumsum(1), jnp.float32)
+        d_full = np.asarray(ops.dtw(x, y))
+        d_b10 = np.asarray(ops.dtw(x, y, band=10))
+        d_b3 = np.asarray(ops.dtw(x, y, band=3))
+        assert (d_b3 >= d_b10 - 1e-4).all()
+        assert (d_b10 >= d_full - 1e-4).all()

@@ -1,0 +1,71 @@
+"""SymED telemetry (numpy sender mirror) + straggler watchdog."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compress import compress_stream
+from repro.train.telemetry import NumpySender, StepWatchdog, TelemetryHub
+
+
+class TestNumpySender:
+    def test_matches_jax_sender(self):
+        """The host-side scalar mirror must emit at the same steps as the
+        vectorized jax sender (same Alg. 1 semantics)."""
+        rng = np.random.default_rng(0)
+        ts = np.cumsum(rng.normal(0, 0.3, 300)).astype(np.float32)
+
+        sender = NumpySender(tol=0.4, alpha=0.02, len_max=64)
+        for t in ts:
+            sender.push(t)
+        np_steps = [s for s, _ in sender.wire][1:]  # skip the t0 hello
+
+        ev = compress_stream(jnp.asarray(ts), tol=0.4, len_max=64, alpha=0.02)
+        jax_steps = np.nonzero(np.asarray(ev["emit"]))[0].tolist()
+        assert np_steps == jax_steps
+
+    def test_compression_accounting(self):
+        s = NumpySender(tol=0.5, alpha=0.05)
+        for t in np.sin(np.linspace(0, 10, 500)):
+            s.push(float(t))
+        assert s.raw_bytes == 2000
+        assert 0 < s.wire_bytes < s.raw_bytes
+        assert s.compression_rate() < 0.5
+
+
+class TestHub:
+    def test_traffic_report_and_digitize(self):
+        hub = TelemetryHub(tol=0.4, alpha=0.05)
+        rng = np.random.default_rng(1)
+        for i in range(300):
+            hub.record("h0/loss", 3 * np.exp(-i / 80) + rng.normal(0, 0.02))
+        rep = hub.traffic_report()
+        assert rep["h0/loss"]["cr"] < 1.0
+        dig = hub.digitize("h0/loss", k_max=8)
+        assert dig is not None and int(dig["k"]) >= 1
+
+
+class TestWatchdog:
+    def test_flags_straggler_and_hang(self):
+        dog = StepWatchdog(alpha=0.1, z_threshold=4.0, warmup=3)
+        rng = np.random.default_rng(2)
+        events = []
+        for i in range(100):
+            dt = 1.0 + rng.normal(0, 0.02)
+            if i == 50:
+                dt = 2.5      # straggler
+            if i == 80:
+                dt = 30.0     # hang
+            ev = dog.observe(i, dt)
+            if ev:
+                events.append(ev)
+        kinds = {e["step"]: e["kind"] for e in events}
+        assert kinds.get(50) == "straggler"
+        assert kinds.get(80) == "hang"
+        # no false positives elsewhere
+        assert set(kinds) == {50, 80}
+
+    def test_quiet_on_steady_steps(self):
+        dog = StepWatchdog(warmup=3)
+        for i in range(50):
+            assert dog.observe(i, 1.0) is None
