@@ -1,5 +1,7 @@
 """Fleet-throughput benchmark (the TPU adaptation's headline table):
-streams/second for the batched SymED pipeline as the slab grows."""
+streams/second for the batched SymED pipeline as the slab grows, plus the
+sharded ``repro.launch.fleet`` runtime (shard_map over the ``data`` axis,
+chunked online ingestion) on whatever devices exist."""
 from __future__ import annotations
 
 from typing import List, Tuple
@@ -9,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.core.symed import SymEDConfig, symed_batch
 from repro.data.synthetic import make_fleet
+from repro.launch.fleet import fleet_data_mesh, run_fleet
 
 from benchmarks.common import timed
 
@@ -29,5 +32,29 @@ def run() -> Tuple[List[tuple], dict]:
         summary[f"streams_{n_streams}"] = {
             "points_per_s": pts / dt,
             "mean_pieces": float(jnp.mean(out["n_pieces"])),
+        }
+
+    # sharded runtime variant: same pipeline through shard_map + chunked
+    # streaming ingestion (on this container the mesh is 1 CPU device; on the
+    # pod target the same call spans the full ``data`` axis)
+    mesh = fleet_data_mesh()
+    for n_streams, chunk in ((64, None), (64, 128), (256, 128)):
+        fleet = jnp.asarray(make_fleet(n_streams, 512, seed=1))
+        (out, tele), dt = timed(
+            lambda f=fleet, c=chunk: run_fleet(
+                f, cfg, jax.random.key(0), mesh, chunk_len=c,
+                reconstruct=False,
+            ),
+            warmup=1, iters=2,
+        )
+        pts = n_streams * 512
+        mode = f"chunk{chunk}" if chunk else "whole"
+        rows.append((f"fleet_sharded_{n_streams}x512_{mode}", 1e6 * dt, pts / dt))
+        summary[f"sharded_{n_streams}_{mode}"] = {
+            "points_per_s": pts / dt,
+            "devices": int(mesh.devices.size),
+            "fleet_wire_bytes": float(tele["wire_bytes"]),
+            "fleet_compression_rate": float(tele["wire_bytes"])
+            / float(tele["raw_bytes"]),
         }
     return rows, summary

@@ -1,8 +1,10 @@
 """Fleet-scale SymED: symbolize thousands of streams, sharded over the mesh.
 
-This is the paper's edge scenario at pod scale: every device owns a slab of
-sender+receiver pairs (shard_map over the ``data`` axis); the wire traffic,
-compression rate and reconstruction error are aggregated fleet-wide.
+This is the paper's edge scenario at pod scale, driven through the
+``repro.launch.fleet`` runtime: every device owns a slab of sender+receiver
+pairs (shard_map over the ``data`` axis), ingestion is chunked/online
+(``--chunk``), and wire traffic / compression rate are aggregated fleet-wide
+with on-mesh reductions.
 
 Run:  PYTHONPATH=src python examples/edge_fleet.py --streams 512 --length 1024
 (on the TPU target the same script runs with mesh=(16,16) and
@@ -12,54 +14,51 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.symed import SymEDConfig, symed_batch
+from repro.core.symed import SymEDConfig
 from repro.data.synthetic import make_fleet
+from repro.launch.fleet import fleet_data_mesh, fleet_report, run_fleet
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, default=256)
     ap.add_argument("--length", type=int, default=1024)
+    ap.add_argument("--chunk", type=int, default=256,
+                    help="online ingestion window; 0 = whole-stream")
     ap.add_argument("--tol", type=float, default=0.5)
     ap.add_argument("--alpha", type=float, default=0.01)
     args = ap.parse_args()
 
     n_dev = jax.device_count()
-    streams = args.streams - args.streams % n_dev
+    mesh = fleet_data_mesh(n_dev)
+    streams = max(args.streams - args.streams % n_dev, n_dev)
     fleet = make_fleet(streams, args.length, seed=0)
     cfg = SymEDConfig(tol=args.tol, alpha=args.alpha, n_max=256, k_max=32,
                       len_max=256)
 
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    sharding = NamedSharding(mesh, P("data", None))
-    fleet_sharded = jax.device_put(fleet, sharding)
-
-    @jax.jit
-    def run(slab, key):
-        return symed_batch(slab, cfg, key, reconstruct=True)
-
     t0 = time.time()
-    out = run(fleet_sharded, jax.random.key(0))
+    out, tele = run_fleet(
+        fleet, cfg, jax.random.key(0), mesh,
+        chunk_len=args.chunk or None, reconstruct=True,
+    )
     jax.block_until_ready(out["n_pieces"])
-    dt = time.time() - t0
+    rep = fleet_report(tele, time.time() - t0)
 
     n_pieces = np.asarray(out["n_pieces"])
-    wire = np.asarray(out["wire_bytes"])
-    raw = 4 * args.length
     print(f"devices                 : {n_dev}")
+    print(f"ingestion               : "
+          f"{'chunked(%d)' % args.chunk if args.chunk else 'whole-stream'}")
     print(f"streams                 : {streams} x {args.length} points")
-    print(f"wall time               : {dt:.2f}s "
-          f"({streams * args.length / dt / 1e6:.2f} Mpoints/s)")
+    print(f"wall time               : {rep['wall_seconds']:.2f}s "
+          f"({rep['points_per_s'] / 1e6:.2f} Mpoints/s)")
     print(f"mean pieces/stream      : {n_pieces.mean():.1f}")
-    print(f"mean compression rate   : {(wire / raw).mean():.4f} (paper avg 0.095)")
-    print(f"fleet raw bytes         : {streams * raw:,}")
-    print(f"fleet wire bytes        : {int(wire.sum()):,} "
-          f"({100 * wire.sum() / (streams * raw):.1f}% of raw)")
+    print(f"mean compression rate   : {rep['compression_rate']:.4f} "
+          f"(paper avg 0.095)")
+    print(f"fleet raw bytes         : {int(rep['raw_bytes']):,}")
+    print(f"fleet wire bytes        : {int(rep['wire_bytes']):,} "
+          f"({100 * rep['compression_rate']:.1f}% of raw)")
     print(f"mean DTW err (pieces)   : {np.asarray(out['re_pieces']).mean():.3f}")
     print(f"mean DTW err (symbols)  : {np.asarray(out['re_symbols']).mean():.3f}")
     print(f"mean alphabet size      : {np.asarray(out['k']).mean():.1f}")

@@ -1,4 +1,4 @@
-"""Checkpointing: atomic, zstd-compressed, reshard-on-restore."""
+"""Checkpointing: atomic, compressed (zstd, zlib fallback), reshard-on-restore."""
 from repro.ckpt.checkpoint import (
     CheckpointManager, latest_step, restore_checkpoint, save_checkpoint,
 )

@@ -3,8 +3,11 @@
 Layout per step::
 
     <dir>/ckpt_<step>/manifest.msgpack   # tree structure, shapes, dtypes,
-                                         # mesh + sharding metadata, step
-    <dir>/ckpt_<step>/data.bin           # zstd frames, one per leaf
+                                         # mesh + sharding metadata, step,
+                                         # compression codec
+    <dir>/ckpt_<step>/data.bin           # compressed frames, one per leaf
+                                         # (zstd when available, else zlib;
+                                         # the manifest records which)
 
 Guarantees:
   * **atomic**: written to ``.tmp-<pid>`` then ``os.rename``d -- a crashed
@@ -32,11 +35,49 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: zstd gives ~2x better ratios, but the wheel may be absent
+    import zstandard
+except ImportError:
+    zstandard = None
+import zlib
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
 
 _SEP = "/"
+
+# Codec used by *new* checkpoints.  Recorded per-manifest so readers pick the
+# right decompressor regardless of which wheels they have; manifests from
+# before the flag existed are zstd by construction.
+_DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
+
+
+def _make_compressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint requests the zstd codec but the zstandard wheel "
+                "is not installed"
+            )
+        cctx = zstandard.ZstdCompressor(level=3)
+        return cctx.compress
+    if codec == "zlib":
+        return lambda data: zlib.compress(data, 6)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _make_decompressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with the zstd codec but the "
+                "zstandard wheel is not installed"
+            )
+        dctx = zstandard.ZstdDecompressor()
+        return lambda data: dctx.decompress(data, max_output_size=1 << 34)
+    if codec == "zlib":
+        return zlib.decompress
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -59,19 +100,20 @@ def save_checkpoint(directory: str | os.PathLike, step: int, state, *,
     tmp.mkdir(parents=True)
 
     leaves = _flatten(state)
-    cctx = zstandard.ZstdCompressor(level=3)
+    compress = _make_compressor(_DEFAULT_CODEC)
     offsets = {}
     with open(tmp / "data.bin", "wb") as f:
         for name, arr in leaves.items():
             buf = io.BytesIO()
             np.save(buf, arr, allow_pickle=False)
-            comp = cctx.compress(buf.getvalue())
+            comp = compress(buf.getvalue())
             offsets[name] = (f.tell(), len(comp))
             f.write(comp)
 
     treedef = jax.tree_util.tree_structure(state)
     manifest = {
         "step": step,
+        "codec": _DEFAULT_CODEC,
         "treedef": str(treedef),
         "leaves": {
             n: {"offset": o, "size": s, "shape": list(leaves[n].shape),
@@ -116,7 +158,7 @@ def restore_checkpoint(
 
     path = Path(directory) / f"ckpt_{step:08d}"
     manifest = msgpack.unpackb((path / "manifest.msgpack").read_bytes())
-    dctx = zstandard.ZstdDecompressor()
+    decompress = _make_decompressor(manifest.get("codec", "zstd"))
     data = (path / "data.bin").read_bytes()
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
@@ -130,10 +172,7 @@ def restore_checkpoint(
         meta = manifest["leaves"].get(name)
         if meta is None:
             raise KeyError(f"leaf {name!r} missing from checkpoint {path}")
-        raw = dctx.decompress(
-            data[meta["offset"]: meta["offset"] + meta["size"]],
-            max_output_size=1 << 34,
-        )
+        raw = decompress(data[meta["offset"]: meta["offset"] + meta["size"]])
         arr = np.load(io.BytesIO(raw), allow_pickle=False)
         expect = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != expect:

@@ -17,13 +17,23 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.compress import compress_stream
+from repro.core.compress import (
+    CompressorState, PieceEvent, compress_stream, compressor_finalize,
+    compressor_init, compressor_step,
+)
 from repro.core.digitize import digitize_pieces
 from repro.core.metrics import compression_rate_symed, drr, dtw_ref
 from repro.core.receiver import compact_events
 from repro.core.reconstruct import reconstruct_from_pieces, reconstruct_from_symbols
 
-__all__ = ["SymEDConfig", "symed_encode", "symed_batch", "symbols_to_string"]
+__all__ = [
+    "SymEDConfig",
+    "symed_encode",
+    "symed_encode_chunk",
+    "symed_finish",
+    "symed_batch",
+    "symbols_to_string",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,18 +56,14 @@ class SymEDConfig:
         )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("len_max", "n_max", "k_min", "k_max", "lloyd_iters", "reconstruct"),
-)
-def _encode(
-    ts, key, *, tol, alpha, scl, len_max, n_max, k_min, k_max, lloyd_iters, reconstruct
+def _receive(
+    events, key, ts, t_len, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct
 ):
-    ts = jnp.asarray(ts, jnp.float32)
-    t_len = ts.shape[-1]
-
-    # --- sender (IoT node) -------------------------------------------------
-    events = compress_stream(ts, tol=tol, len_max=len_max, alpha=alpha)
+    """Wire -> receiver: compact, digitize, score.  Shared by the whole-stream
+    (``_encode``) and chunked (``_finish``) paths so their outputs stay
+    identical by construction.  ``events`` must carry per-step ``emit`` /
+    ``endpoint`` plus the trailing-flush ``tail``; ``t_len`` is the true
+    stream length (``ts`` may be just ``ts[:1]`` when not reconstructing)."""
     # --- wire ---------------------------------------------------------------
     wire = compact_events(events, n_max=n_max, t0=ts[0])
     # --- receiver (edge node) ----------------------------------------------
@@ -93,6 +99,23 @@ def _encode(
     return out
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("len_max", "n_max", "k_min", "k_max", "lloyd_iters", "reconstruct"),
+)
+def _encode(
+    ts, key, *, tol, alpha, scl, len_max, n_max, k_min, k_max, lloyd_iters, reconstruct
+):
+    ts = jnp.asarray(ts, jnp.float32)
+
+    # --- sender (IoT node) -------------------------------------------------
+    events = compress_stream(ts, tol=tol, len_max=len_max, alpha=alpha)
+    return _receive(
+        events, key, ts, ts.shape[-1], tol=tol, scl=scl, n_max=n_max,
+        k_min=k_min, k_max=k_max, lloyd_iters=lloyd_iters, reconstruct=reconstruct,
+    )
+
+
 def symed_encode(
     ts: jax.Array, cfg: SymEDConfig, key: jax.Array, reconstruct: bool = True
 ) -> Dict[str, jax.Array]:
@@ -101,6 +124,93 @@ def symed_encode(
         ts, key, tol=cfg.tol, alpha=cfg.alpha, scl=cfg.scl,
         len_max=cfg.len_max, n_max=cfg.n_max, k_min=cfg.k_min, k_max=cfg.k_max,
         lloyd_iters=cfg.lloyd_iters, reconstruct=reconstruct,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("len_max", "first"))
+def _encode_chunk(chunk, state, *, tol, alpha, len_max, first):
+    chunk = jnp.asarray(chunk, jnp.float32)
+    ts_t = jnp.moveaxis(chunk, -1, 0)
+    if first:
+        state = compressor_init(ts_t[0])
+        xs = ts_t[1:]
+    else:
+        xs = ts_t
+
+    def step(s, t):
+        return compressor_step(s, t, tol=tol, len_max=len_max, alpha=alpha)
+
+    state, events = jax.lax.scan(step, state, xs)
+    if first:
+        # no-emit slot for t_0 so events align 1:1 with chunk steps
+        pad0 = lambda x: jnp.concatenate([jnp.zeros_like(x[:1]), x], axis=0)
+        events = PieceEvent(*(pad0(x) for x in events))
+    to_batch_last = lambda x: jnp.moveaxis(x, 0, -1)
+    ev = {
+        "emit": to_batch_last(events.emit),
+        "endpoint": to_batch_last(events.endpoint),
+        "length": to_batch_last(events.length),
+        "inc": to_batch_last(events.inc),
+    }
+    return state, ev
+
+
+def symed_encode_chunk(
+    ts_chunk: jax.Array, cfg: SymEDConfig, state: CompressorState | None = None
+) -> tuple[CompressorState, Dict[str, jax.Array]]:
+    """Resumable sender: ingest one ``(..., C)`` window of the stream.
+
+    ``state=None`` opens the stream (the chunk's first point seeds the
+    compressor, exactly like ``compress_stream``); pass the returned state to
+    ingest the next window.  Step-for-step identical to running
+    ``compress_stream`` over the concatenated windows -- this is what makes
+    the fleet runtime (``repro.launch.fleet``) *online*: a slab is processed
+    in ``chunk_len`` windows with O(1)-per-stream carry instead of one giant
+    batch.
+
+    Returns ``(state, events)`` where ``events`` holds per-step ``emit`` /
+    ``endpoint`` / ``length`` / ``inc`` arrays shaped like the chunk.
+    """
+    return _encode_chunk(
+        ts_chunk, state, tol=cfg.tol, alpha=cfg.alpha, len_max=cfg.len_max,
+        first=state is None,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_max", "k_min", "k_max", "lloyd_iters", "reconstruct"),
+)
+def _finish(
+    events, state, key, ts, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct
+):
+    tail = compressor_finalize(state)
+    return _receive(
+        {**events, "tail": tail}, key, ts, events["emit"].shape[-1],
+        tol=tol, scl=scl, n_max=n_max, k_min=k_min, k_max=k_max,
+        lloyd_iters=lloyd_iters, reconstruct=reconstruct,
+    )
+
+
+def symed_finish(
+    events: Dict[str, jax.Array],
+    state: CompressorState,
+    cfg: SymEDConfig,
+    key: jax.Array,
+    ts: jax.Array,
+    reconstruct: bool = True,
+) -> Dict[str, jax.Array]:
+    """Close a chunked stream: flush the open segment, wire-compact, digitize.
+
+    ``events`` are the per-step arrays from ``symed_encode_chunk`` calls,
+    concatenated along the step axis (single stream, ``(T,)``); ``ts`` is the
+    full raw stream (the reconstruction error is scored against it; only
+    ``ts[0]`` enters the wire).  Output dict matches ``symed_encode``.
+    """
+    return _finish(
+        events, state, key, jnp.asarray(ts, jnp.float32),
+        tol=cfg.tol, scl=cfg.scl, n_max=cfg.n_max, k_min=cfg.k_min,
+        k_max=cfg.k_max, lloyd_iters=cfg.lloyd_iters, reconstruct=reconstruct,
     )
 
 

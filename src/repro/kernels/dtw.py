@@ -25,7 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils.jax_compat import MemorySpace, tpu_compiler_params
 
 __all__ = ["dtw_pallas"]
 
@@ -104,15 +105,13 @@ def dtw_pallas(
         _kernel,
         grid=(bp // bb,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=MemorySpace.SMEM),
             pl.BlockSpec((bb, n_pad), lambda i: (i, 0)),
             pl.BlockSpec((bb, 3 * n_pad), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((bp,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,),
-        ),
+        compiler_params=tpu_compiler_params("parallel"),
         interpret=interpret,
     )(meta, x_p, y_buf)
     return out[:b]

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils.jax_compat import MemorySpace, tpu_compiler_params
+
 __all__ = ["ewma_scan_pallas", "CHUNK"]
 
 CHUNK = 32
@@ -129,7 +131,7 @@ def ewma_scan_pallas(
         _ewma_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=MemorySpace.SMEM),
             pl.BlockSpec((bb, bt), lambda i, j: (i, j)),
         ],
         out_specs=[
@@ -144,12 +146,8 @@ def ewma_scan_pallas(
             pltpu.VMEM((bb,), jnp.float32),
             pltpu.VMEM((bb,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,    # batch tiles
-                pltpu.GridDimensionSemantics.ARBITRARY,   # sequential time
-            ),
-        ),
+        # batch tiles parallel, time blocks sequential (carry in scratch)
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(alpha_arr, ts_p)
     return means[:b, :t], vars_[:b, :t]

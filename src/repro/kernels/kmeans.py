@@ -20,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils.jax_compat import tpu_compiler_params
 
 __all__ = ["kmeans_assign_pallas"]
 
@@ -118,12 +119,8 @@ def kmeans_assign_pallas(
             jax.ShapeDtypeStruct((s, kp, dp), jnp.float32),
             jax.ShapeDtypeStruct((s, kp), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
-            ),
-        ),
+        # streams parallel, N tiles sequential (stats accumulate in-place)
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(x_p, m_p, c_p, a_p)
     return labels[:, :n], sums[:, :k, :d], counts[:, :k]

@@ -134,6 +134,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)   # while-trip-count aware
     wire = collective_wire_bytes(colls)

@@ -30,10 +30,9 @@ def elastic_mesh(model_size: int, *, devices: Optional[Sequence] = None):
             f"{len(devices)} devices cannot host a model axis of {model_size}")
     data = len(devices) // model_size
     n = data * model_size
-    return jax.make_mesh(
-        (data, model_size), ("data", "model"), devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.utils.jax_compat import make_mesh
+
+    return make_mesh((data, model_size), ("data", "model"), devices=devices[:n])
 
 
 def resume_on_mesh(ckpt_dir, abstract_state, mesh):

@@ -5,12 +5,16 @@ Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) -- the ``pod``
 axis is pure data parallelism across ICI/DCN pod boundaries.
 
 Functions (not module constants) so importing never touches jax device state.
+Mesh construction goes through ``repro.utils.jax_compat.make_mesh`` so the
+``axis_types`` kwarg (absent before jax 0.5) is only passed where it exists.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
+
+from repro.utils.jax_compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
@@ -28,10 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "entrypoint must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before importing jax"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_test_mesh(shape: Sequence[int] = (2, 2), axes: Sequence[str] = ("data", "model")):
@@ -39,7 +40,4 @@ def make_test_mesh(shape: Sequence[int] = (2, 2), axes: Sequence[str] = ("data",
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(tuple(shape), tuple(axes), devices=jax.devices()[:n])

@@ -155,9 +155,11 @@ def make_compressed_train_step(cfg, oc: OptConfig, mesh, *, remat: bool = True):
                 "loss": 0, "grad_norm": 0, "xent": 0, "aux": 0,
             }),
         )
-        return jax.shard_map(
-            body, mesh=mesh, in_specs=(state_specs, batch_specs),
-            out_specs=out_specs, check_vma=False, axis_names=frozenset({"pod"}),
+        from repro.utils.jax_compat import shard_map
+
+        return shard_map(
+            body, mesh, in_specs=(state_specs, batch_specs),
+            out_specs=out_specs, axis_names=frozenset({"pod"}),
         )(state, batch)
 
     return train_step

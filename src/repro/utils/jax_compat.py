@@ -1,0 +1,144 @@
+"""Version-compat shims for JAX APIs that were renamed across releases.
+
+The kernels and launchers in this repo target the *current* Pallas/sharding
+API surface (``pltpu.MemorySpace``, ``pltpu.CompilerParams``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.shard_map``); the pinned
+toolchain in this container ships jax 0.4.37, where those names are still
+``pltpu.TPUMemorySpace`` / ``pltpu.TPUCompilerParams``, ``dimension_semantics``
+takes the string literals ``'parallel'``/``'arbitrary'`` instead of the
+``GridDimensionSemantics`` enum, ``make_mesh`` has no ``axis_types`` kwarg,
+and ``shard_map`` lives in ``jax.experimental`` with a ``check_rep`` flag.
+
+Everything is resolved by feature detection (never version string parsing),
+so the same source runs on both sides of each rename:
+
+=====================  ==========================  =========================
+concept                old name (<= 0.4.x)         new name
+=====================  ==========================  =========================
+TPU memory spaces      ``pltpu.TPUMemorySpace``    ``pltpu.MemorySpace``
+compiler params        ``pltpu.TPUCompilerParams`` ``pltpu.CompilerParams``
+dimension semantics    ``('parallel', ...)`` strs  ``GridDimensionSemantics``
+mesh axis types        (no kwarg)                  ``axis_types=AxisType...``
+shard_map              ``jax.experimental...``     ``jax.shard_map``
+replication check      ``check_rep=``              ``check_vma=``
+=====================  ==========================  =========================
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "MemorySpace",
+    "CompilerParams",
+    "dimension_semantics",
+    "tpu_compiler_params",
+    "make_mesh",
+    "shard_map",
+    "HAS_AXIS_TYPES",
+]
+
+# --- Pallas TPU memory spaces ------------------------------------------------
+# pltpu.TPUMemorySpace (enum: ANY/SMEM/VMEM/CMEM/SEMAPHORE) was renamed to
+# pltpu.MemorySpace; members are identical.
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+# --- Pallas TPU compiler params ---------------------------------------------
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# GridDimensionSemantics is an enum-like namespace on new JAX; old JAX wants
+# the literal strings 'parallel' / 'arbitrary' (it also exposes module-level
+# pltpu.PARALLEL / pltpu.ARBITRARY sentinels, but the dataclass is typed for
+# the strings, so strings are the safe denominator there).
+_GDS = getattr(pltpu, "GridDimensionSemantics", None)
+
+
+def dimension_semantics(*kinds: str) -> tuple:
+    """Map ``'parallel'``/``'arbitrary'`` strings onto the installed API.
+
+    Usage::
+
+        compiler_params=tpu_compiler_params("parallel", "arbitrary")
+    """
+    for k in kinds:
+        if k not in ("parallel", "arbitrary"):
+            raise ValueError(f"unknown dimension semantic {k!r}")
+    if _GDS is not None and hasattr(_GDS, "PARALLEL"):
+        table = {"parallel": _GDS.PARALLEL, "arbitrary": _GDS.ARBITRARY}
+        return tuple(table[k] for k in kinds)
+    return tuple(kinds)
+
+
+def tpu_compiler_params(*kinds: str, **kwargs: Any):
+    """``CompilerParams`` with version-appropriate ``dimension_semantics``."""
+    return CompilerParams(dimension_semantics=dimension_semantics(*kinds), **kwargs)
+
+
+# --- Mesh construction -------------------------------------------------------
+_MAKE_MESH_PARAMS = inspect.signature(jax.make_mesh).parameters
+HAS_AXIS_TYPES = "axis_types" in _MAKE_MESH_PARAMS and hasattr(
+    jax.sharding, "AxisType"
+)
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+):
+    """``jax.make_mesh`` that requests Auto axis types where supported.
+
+    On new JAX every axis is created as ``AxisType.Auto`` (the repo never uses
+    Explicit axes); on old JAX the kwarg simply does not exist and Auto is the
+    only behavior anyway.
+    """
+    kwargs: dict = {"devices": devices}
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# --- shard_map ---------------------------------------------------------------
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # moved out of jax.experimental after 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SM_PARAMS = inspect.signature(_shard_map_impl).parameters
+
+
+def shard_map(
+    f,
+    mesh,
+    in_specs,
+    out_specs,
+    *,
+    check_replication: bool = False,
+    axis_names: Optional[frozenset] = None,
+):
+    """Uniform ``shard_map`` across the ``check_rep`` -> ``check_vma`` rename.
+
+    ``check_replication=False`` (the default) disables the out-spec
+    replication check under whichever flag name the installed JAX uses --
+    the fleet runtime emits psum-reduced telemetry whose replication the
+    old checker cannot always prove.
+
+    ``axis_names`` (new-API spelling): the subset of mesh axes the body is
+    manual over.  Old JAX expresses the same thing inverted, as
+    ``auto=<the other axes>``.
+    """
+    kwargs: dict = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if "check_vma" in _SM_PARAMS:
+        kwargs["check_vma"] = check_replication
+    elif "check_rep" in _SM_PARAMS:
+        kwargs["check_rep"] = check_replication
+    if axis_names is not None:
+        if "axis_names" in _SM_PARAMS:
+            kwargs["axis_names"] = frozenset(axis_names)
+        else:
+            kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map_impl(f, **kwargs)

@@ -1,0 +1,115 @@
+"""``hypothesis`` shim: real property testing when installed, deterministic
+parametrized sampling otherwise.
+
+The property tests in ``test_core_compress.py`` / ``test_core_digitize.py``
+import ``given`` / ``settings`` / ``st`` from here.  With the ``hypothesis``
+wheel present they get the real thing (shrinking, example database, ...).
+Without it they still *run* -- ``@given`` degrades to a loop over seeded
+deterministic draws from miniature strategy objects, so the properties are
+checked on a fixed sample instead of being skipped wholesale.
+
+Only the strategy combinators the suite uses are implemented:
+``st.floats(lo, hi)``, ``st.integers(lo, hi)`` and
+``st.lists(elem, min_size=, max_size=)``.
+"""
+from __future__ import annotations
+
+import functools
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 12  # draws per @given when hypothesis is absent
+
+    class _Strategy:
+        """A draw function ``rng -> value`` plus boundary examples."""
+
+        def __init__(self, draw, boundary=()):
+            self._draw = draw
+            self._boundary = tuple(boundary)
+
+        def draw(self, rng, i):
+            # lead with the boundary examples, then seeded random draws
+            if i < len(self._boundary):
+                return self._boundary[i]
+            return self._draw(rng)
+
+    class st:  # noqa: N801 -- mirrors ``hypothesis.strategies`` spelling
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                boundary=(float(min_value), float(max_value)),
+            )
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                boundary=(int(min_value), int(max_value)),
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng, i + 1000) for i in range(n)]
+
+            boundary = ()
+            if min_size > 0:
+                # smallest allowed list, deterministic elements
+                boundary = (
+                    [
+                        elements.draw(_np.random.default_rng(7), i + 1000)
+                        for i in range(min_size)
+                    ],
+                )
+            return _Strategy(draw, boundary=boundary)
+
+    import inspect as _inspect
+
+    def given(*strategies_args, **strategies_kw):
+        def decorate(fn):
+            # hypothesis semantics: positional strategies fill the *trailing*
+            # params.  Bind them by name (keyword) so tests that also take
+            # pytest fixtures keep working when pytest passes those fixtures
+            # as keywords.
+            sig = _inspect.signature(fn)
+            params = list(sig.parameters.values())
+            n_pos = len(strategies_args)
+            trailing = [p.name for p in params[len(params) - n_pos:]] if n_pos else []
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for i in range(_FALLBACK_EXAMPLES):
+                    rng = _np.random.default_rng(0xC0FFEE + 7919 * i)
+                    named = dict(zip(trailing,
+                                     (s.draw(rng, i) for s in strategies_args)))
+                    named.update(
+                        {k: s.draw(rng, i) for k, s in strategies_kw.items()})
+                    fn(*args, **named, **kwargs)
+
+            # hide the strategy-bound params from pytest's fixture resolution
+            # (keep e.g. ``self`` and real fixtures).
+            bound = set(trailing) | set(strategies_kw)
+            del wrapper.__wrapped__  # stop signature() following back to fn
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for p in params if p.name not in bound])
+            return wrapper
+
+        return decorate
+
+    def settings(*_a, **_kw):  # max_examples/deadline are no-ops here
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -93,8 +93,8 @@ state = {{"w": jnp.arange(64.0).reshape(8, 8)}}
 save_checkpoint(r"{tmp_path}", 1, state)
 
 # "new cluster": restore onto a 4-device mesh (elastic downsize), sharded
-mesh = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4],
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.utils.jax_compat import make_mesh
+mesh = make_mesh((4,), ("data",), devices=jax.devices()[:4])
 shard = {{"w": NamedSharding(mesh, P("data", None))}}
 restored, _ = restore_checkpoint(r"{tmp_path}", 1, state, shardings=shard)
 assert restored["w"].sharding.num_devices == 4

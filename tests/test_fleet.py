@@ -1,0 +1,187 @@
+"""Fleet runtime tests: chunked/online ingestion + the sharded shard_map path.
+
+The chunked path must be *bitwise* identical to the whole-stream encoder
+(same fp ops in the same order; the carry is exact), and the sharded runtime
+must match ``symed_batch`` regardless of mesh layout (per-stream PRNG keys
+are split before sharding).  Multi-device coverage runs in a subprocess with
+forced host devices, mirroring ``tests/test_system.py``.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_stream
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from repro.core.symed import (
+    SymEDConfig, symed_batch, symed_encode, symed_encode_chunk, symed_finish,
+)
+
+CFG = SymEDConfig(tol=0.5, alpha=0.01, n_max=256, k_max=32, len_max=128)
+
+
+def _chunked_encode(ts, cfg, chunk_len, key, reconstruct=True):
+    state, parts = None, []
+    for c in range(0, ts.shape[-1], chunk_len):
+        state, ev = symed_encode_chunk(ts[..., c: c + chunk_len], cfg, state)
+        parts.append(ev)
+    events = {k: jnp.concatenate([p[k] for p in parts], axis=-1)
+              for k in parts[0]}
+    return symed_finish(events, state, cfg, key, ts, reconstruct)
+
+
+class TestChunkedEncode:
+    @pytest.mark.parametrize("chunk_len", [96, 128, 512, 1024])
+    def test_bitwise_equals_whole_stream(self, rng, chunk_len):
+        """Carried CompressorState across chunks == one-shot encode, bitwise.
+
+        chunk_len=96 exercises a ragged tail (512 % 96 != 0); 1024 a single
+        oversized window."""
+        ts = jnp.asarray(make_stream(rng, 512))
+        key = jax.random.key(0)
+        whole = symed_encode(ts, CFG, key)
+        chunked = _chunked_encode(ts, CFG, chunk_len, key)
+        assert set(whole) == set(chunked)
+        for k in whole:
+            np.testing.assert_array_equal(
+                np.asarray(whole[k]), np.asarray(chunked[k]), err_msg=k)
+
+    def test_chunk_events_align_with_stream(self, rng):
+        """Per-step event arrays concatenate to exactly T slots; slot 0 (the
+        t0 'hello') never emits."""
+        ts = jnp.asarray(make_stream(rng, 300))
+        state, parts = None, []
+        for c in range(0, 300, 100):
+            state, ev = symed_encode_chunk(ts[c: c + 100], CFG, state)
+            assert ev["emit"].shape[-1] == 100
+            parts.append(ev)
+        emit = np.concatenate([np.asarray(p["emit"]) for p in parts], -1)
+        assert emit.shape == (300,)
+        assert not emit[0]
+
+    def test_state_is_resumable_midstream(self, rng):
+        """The carry after k chunks equals the whole-stream compressor state
+        at the same point (tree-equal, not just behaviorally equal)."""
+        from repro.core.compress import compress_stream
+
+        ts = jnp.asarray(make_stream(rng, 256))
+        full = compress_stream(ts, tol=CFG.tol, len_max=CFG.len_max,
+                               alpha=CFG.alpha)
+        state = None
+        for c in range(0, 256, 64):
+            state, _ = symed_encode_chunk(ts[c: c + 64], CFG, state)
+        for a, b in zip(jax.tree.leaves(state),
+                        jax.tree.leaves(full["final_state"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batched_chunks(self, rng):
+        """Chunked ingestion is vectorized over the stream (slab) axis."""
+        slab = jnp.asarray(np.stack([make_stream(rng, 256) for _ in range(3)]))
+        keys = jax.random.split(jax.random.key(0), 3)
+        state, parts = None, []
+        for c in range(0, 256, 64):
+            state, ev = symed_encode_chunk(slab[:, c: c + 64], CFG, state)
+            parts.append(ev)
+        events = {k: jnp.concatenate([p[k] for p in parts], -1) for k in parts[0]}
+        out = jax.vmap(
+            lambda e, s, k, t: symed_finish(e, s, CFG, k, t, True)
+        )(events, state, keys, slab)
+        for i in range(3):
+            single = symed_encode(slab[i], CFG, keys[i])
+            np.testing.assert_array_equal(
+                np.asarray(out["symbols"][i]), np.asarray(single["symbols"]))
+            np.testing.assert_array_equal(
+                np.asarray(out["n_pieces"][i]), np.asarray(single["n_pieces"]))
+
+
+class TestFleetRuntime:
+    def test_single_device_matches_symed_batch(self, rng):
+        """run_fleet on a 1-device mesh == plain symed_batch (both modes)."""
+        from repro.launch.fleet import fleet_data_mesh, run_fleet
+
+        slab = jnp.asarray(np.stack([make_stream(rng, 384) for _ in range(4)]))
+        ref = symed_batch(slab, CFG, jax.random.key(0), reconstruct=False)
+        mesh = fleet_data_mesh(1)
+        for chunk_len in (None, 128):
+            out, tele = run_fleet(slab, CFG, jax.random.key(0), mesh,
+                                  chunk_len=chunk_len, reconstruct=False)
+            np.testing.assert_array_equal(
+                np.asarray(out["symbols"]), np.asarray(ref["symbols"]))
+            np.testing.assert_array_equal(
+                np.asarray(out["n_pieces"]), np.asarray(ref["n_pieces"]))
+            assert float(tele["streams"]) == 4
+            assert float(tele["points"]) == 4 * 384
+            assert float(tele["pieces"]) == float(
+                jnp.sum(ref["n_pieces"].astype(jnp.float32)))
+            assert float(tele["wire_bytes"]) == pytest.approx(
+                float(jnp.sum(ref["wire_bytes"])))
+
+    def test_uneven_shard_rejected(self):
+        """n_streams must divide over the data shards (checked up front)."""
+        import types
+
+        from repro.launch.fleet import run_fleet
+
+        fake_mesh = types.SimpleNamespace(
+            axis_names=("data",),
+            devices=np.empty((2,), dtype=object),
+        )
+        with pytest.raises(ValueError, match="divide"):
+            run_fleet(jnp.zeros((3, 64)), CFG, jax.random.key(0), fake_mesh)
+
+    def test_sharded_matches_batch_on_2x2_mesh(self, tmp_path):
+        """shard_map over the data axis of a (2,2) mesh reproduces
+        symed_batch exactly (subprocess: forced host devices)."""
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.symed import SymEDConfig, symed_batch
+from repro.launch.mesh import make_test_mesh
+from repro.launch.fleet import run_fleet
+
+cfg = SymEDConfig(tol=0.5, alpha=0.01, n_max=128, k_max=16, len_max=64)
+rng = np.random.default_rng(3)
+slab = jnp.asarray(np.cumsum(rng.normal(0, 0.3, (8, 256)), axis=1),
+                   jnp.float32)
+ref = symed_batch(slab, cfg, jax.random.key(7), reconstruct=False)
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+for chunk_len in (None, 64):
+    out, tele = run_fleet(slab, cfg, jax.random.key(7), mesh,
+                          chunk_len=chunk_len, reconstruct=False)
+    np.testing.assert_array_equal(np.asarray(out["symbols"]),
+                                  np.asarray(ref["symbols"]))
+    np.testing.assert_array_equal(np.asarray(out["n_pieces"]),
+                                  np.asarray(ref["n_pieces"]))
+    np.testing.assert_allclose(np.asarray(out["centers"]),
+                               np.asarray(ref["centers"]))
+    assert float(tele["pieces"]) == float(jnp.sum(ref["n_pieces"]))
+print("FLEET_SHARD_OK")
+"""
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, env=env, cwd=REPO, timeout=560)
+        assert "FLEET_SHARD_OK" in out.stdout, (out.stdout[-500:],
+                                                out.stderr[-2000:])
+
+    @pytest.mark.slow
+    def test_cli_entrypoint(self):
+        """`python -m repro.launch.fleet` dry-runs on forced host devices and
+        prints fleet telemetry."""
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.fleet", "--streams", "16",
+             "--length", "256", "--chunk", "128", "--devices", "2"],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=560,
+        )
+        assert out.returncode == 0, (out.stdout[-500:], out.stderr[-2000:])
+        assert "compression rate" in out.stdout
+        assert "pieces/s" in out.stdout
+        assert "devices / data shards   : 2" in out.stdout

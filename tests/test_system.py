@@ -119,18 +119,17 @@ class TestGradCompression:
         from jax.sharding import PartitionSpec as P
 
         from repro.train.steps import quantized_psum_mean
+        from repro.utils.jax_compat import make_mesh, shard_map
 
         g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 0.01, (64, 64)),
                               jnp.float32)}
-        mesh = jax.make_mesh((1,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("pod",))
 
         def f(gg):
             return quantized_psum_mean(gg, "pod", 1)
 
-        out, efb = jax.shard_map(
-            f, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
-            check_vma=False,
+        out, efb = shard_map(
+            f, mesh, in_specs=(P(),), out_specs=(P(), P()),
         )(g)
         err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"]))
         scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
