@@ -1,7 +1,10 @@
 """Fleet-throughput benchmark (the TPU adaptation's headline table):
 streams/second for the batched SymED pipeline as the slab grows, plus the
-sharded ``repro.launch.fleet`` runtime (shard_map over the ``data`` axis,
-chunked online ingestion) on whatever devices exist."""
+sharded ``repro.launch.fleet`` runtime on whatever devices exist -- flat
+``data`` sharding, the streaming receiver at several digitize cadences, and
+the 2-D ``(pod, data)`` layout with hierarchical telemetry reduction (on the
+16x16 dry-run pod the same rows span 256 chips; here the mesh degenerates to
+the local device count)."""
 from __future__ import annotations
 
 from typing import List, Tuple
@@ -11,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.symed import SymEDConfig, symed_batch
 from repro.data.synthetic import make_fleet
-from repro.launch.fleet import fleet_data_mesh, run_fleet
+from repro.launch.fleet import fleet_data_mesh, fleet_report, run_fleet
+from repro.launch.mesh import make_pod_data_mesh
 
 from benchmarks.common import timed
 
@@ -34,27 +38,66 @@ def run() -> Tuple[List[tuple], dict]:
             "mean_pieces": float(jnp.mean(out["n_pieces"])),
         }
 
-    # sharded runtime variant: same pipeline through shard_map + chunked
-    # streaming ingestion (on this container the mesh is 1 CPU device; on the
-    # pod target the same call spans the full ``data`` axis)
+    # sharded runtime variant: same pipeline through shard_map + the streaming
+    # receiver at several digitize cadences (on this container the mesh is 1
+    # CPU device; on the pod target the same call spans the full ``data``
+    # axis).  k=None digitizes once at end-of-stream; k=1/2 emit symbols
+    # online -- deliberately the expensive shape (the receiver's k-means runs
+    # T/(C*k) times per stream), so these rows use a smaller slab.  Stream
+    # counts are rounded up to a device-count multiple so the same rows run
+    # on any mesh (run_fleet requires an even shard split).
+    n_dev = jax.device_count()
+    round_up = lambda n: -(-n // n_dev) * n_dev
     mesh = fleet_data_mesh()
-    for n_streams, chunk in ((64, None), (64, 128), (256, 128)):
+    for n_streams, chunk, dk in (
+        (64, None, None), (64, 128, None), (256, 128, None),
+        (32, 128, 1), (32, 128, 2),
+    ):
+        n_streams = round_up(n_streams)
         fleet = jnp.asarray(make_fleet(n_streams, 512, seed=1))
         (out, tele), dt = timed(
-            lambda f=fleet, c=chunk: run_fleet(
+            lambda f=fleet, c=chunk, k=dk: run_fleet(
                 f, cfg, jax.random.key(0), mesh, chunk_len=c,
-                reconstruct=False,
+                digitize_every_k=k, reconstruct=False,
             ),
             warmup=1, iters=2,
         )
         pts = n_streams * 512
-        mode = f"chunk{chunk}" if chunk else "whole"
+        mode = (f"chunk{chunk}_k{dk}" if dk else
+                f"chunk{chunk}" if chunk else "whole")
         rows.append((f"fleet_sharded_{n_streams}x512_{mode}", 1e6 * dt, pts / dt))
+        rep = fleet_report(tele, dt)
         summary[f"sharded_{n_streams}_{mode}"] = {
             "points_per_s": pts / dt,
             "devices": int(mesh.devices.size),
-            "fleet_wire_bytes": float(tele["wire_bytes"]),
-            "fleet_compression_rate": float(tele["wire_bytes"])
-            / float(tele["raw_bytes"]),
+            "fleet_wire_bytes": rep["wire_bytes"],
+            "fleet_compression_rate": rep["compression_rate"],
+            "ms_per_symbol": rep["ms_per_symbol"],
         }
+
+    # multi-pod layout: shard over the flattened (pod, data) grid with the
+    # hierarchical psum tree (data within a pod, then across pods).  Pod count
+    # degenerates to 1 on a single local device; on the dry-run target this is
+    # the 2 x 256 two-pod mesh.
+    n_pods = 2 if n_dev % 2 == 0 and n_dev >= 2 else 1
+    pod_mesh = make_pod_data_mesh(n_pods, n_dev // n_pods)
+    n_streams = round_up(32)
+    fleet = jnp.asarray(make_fleet(n_streams, 512, seed=1))
+    (out, tele), dt = timed(
+        lambda: run_fleet(
+            fleet, cfg, jax.random.key(0), pod_mesh, chunk_len=128,
+            digitize_every_k=2, reconstruct=False, axis=("pod", "data"),
+        ),
+        warmup=1, iters=2,
+    )
+    rep = fleet_report(tele, dt)
+    rows.append((f"fleet_pods{n_pods}_{n_streams}x512_chunk128_k2", 1e6 * dt,
+                 n_streams * 512 / dt))
+    summary["pod_data"] = {
+        "points_per_s": n_streams * 512 / dt,
+        "streams": n_streams,
+        "layout": f"{n_pods}x{n_dev // n_pods}",
+        "fleet_compression_rate": rep["compression_rate"],
+        "ms_per_symbol": rep["ms_per_symbol"],
+    }
     return rows, summary

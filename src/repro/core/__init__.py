@@ -18,6 +18,7 @@ from repro.core.compress import (
 from repro.core.digitize import (
     DigitizerState,
     digitize_pieces,
+    digitize_span,
     digitizer_init,
     digitizer_step,
     masked_kmeans,
@@ -31,7 +32,12 @@ from repro.core.metrics import (
     dtw_ref,
 )
 from repro.core.normalize import EwmState, ewm_init, ewm_scan, ewm_step, standardize
-from repro.core.receiver import compact_events, pieces_from_wire
+from repro.core.receiver import (
+    append_tail,
+    compact_chunk,
+    compact_events,
+    pieces_from_wire,
+)
 from repro.core.reconstruct import (
     inverse_compression,
     inverse_digitization,
@@ -39,6 +45,17 @@ from repro.core.reconstruct import (
     reconstruct_from_pieces,
     reconstruct_from_symbols,
 )
-from repro.core.symed import SymEDConfig, symbols_to_string, symed_batch, symed_encode
+from repro.core.symed import (
+    ReceiverState,
+    SymEDConfig,
+    symbols_to_string,
+    symed_batch,
+    symed_encode,
+    symed_encode_chunk,
+    symed_finish,
+    symed_receive_chunk,
+    symed_receive_finish,
+    symed_step_chunk,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

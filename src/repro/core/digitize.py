@@ -36,6 +36,7 @@ __all__ = [
     "digitizer_init",
     "digitizer_step",
     "digitize_pieces",
+    "digitize_span",
     "masked_kmeans",
     "max_cluster_variance",
     "scale_coords",
@@ -242,6 +243,55 @@ def digitizer_step(
     return new_state, symbol
 
 
+def digitize_span(
+    state: DigitizerState,
+    lengths: jax.Array,
+    incs: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    tol: float,
+    scl: float,
+    k_min: int,
+    k_max_active: int,
+    lloyd_iters: int = 10,
+) -> Tuple[DigitizerState, jax.Array]:
+    """Ingest buffer slots ``lo <= idx < hi`` into a resumable digitizer.
+
+    This is the online-receiver primitive: pieces live in the padded wire
+    buffers ``lengths``/``incs`` (n_max,), ``state.n`` pieces have already
+    been digitized (callers pass ``lo = state.n``), and the span up to ``hi``
+    (the pieces that arrived since the last digitize) is scanned through
+    ``digitizer_step`` one piece at a time.  ``digitize_pieces`` is the
+    ``lo=0`` instantiation, so resuming in any number of spans is
+    bitwise-identical to one whole-buffer pass by construction.
+
+    Returns ``(state, symbols)`` -- ``symbols`` (n_max,) holds the symbol
+    emitted when each span slot arrived (0 outside the span).
+    """
+    n_max = lengths.shape[0]
+    pieces = jnp.stack(
+        [lengths.astype(jnp.float32), incs.astype(jnp.float32)], axis=-1
+    )
+
+    def step(s, xs):
+        piece, idx = xs
+        live = (idx >= lo) & (idx < hi)
+
+        def do(st):
+            return digitizer_step(
+                st, piece, tol=tol, scl=scl, k_min=k_min,
+                k_max_active=k_max_active, lloyd_iters=lloyd_iters,
+            )
+
+        def skip(st):
+            return st, jnp.zeros((), jnp.int32)
+
+        return jax.lax.cond(live, do, skip, s)
+
+    return jax.lax.scan(step, state, (pieces, jnp.arange(n_max)))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k_cap", "k_min", "k_max_active", "lloyd_iters", "use_kernel"),
@@ -274,24 +324,11 @@ def digitize_pieces(
     n_max = lengths.shape[0]
     k_cap = int(k_cap)
     state = digitizer_init(n_max, k_cap, key)
-    pieces = jnp.stack([lengths.astype(jnp.float32), incs.astype(jnp.float32)], axis=-1)
-
-    def step(state, xs):
-        piece, idx = xs
-        live = idx < n_pieces
-
-        def do(s):
-            return digitizer_step(
-                s, piece, tol=tol, scl=scl, k_min=k_min,
-                k_max_active=k_max_active, lloyd_iters=lloyd_iters,
-            )
-
-        def skip(s):
-            return s, jnp.zeros((), jnp.int32)
-
-        return jax.lax.cond(live, do, skip, state)
-
-    final, symbols = jax.lax.scan(step, state, (pieces, jnp.arange(n_max)))
+    final, symbols = digitize_span(
+        state, lengths, incs, jnp.zeros((), jnp.int32), n_pieces,
+        tol=tol, scl=scl, k_min=k_min, k_max_active=k_max_active,
+        lloyd_iters=lloyd_iters,
+    )
     return {
         "labels": final.labels,
         "centers": final.centers,

@@ -70,14 +70,16 @@ def dtw_ref(x: jax.Array, y: jax.Array, band: int | None = None) -> jax.Array:
     return jnp.sqrt(total)
 
 
-def compression_rate_symed(n_pieces: jax.Array, n_points: int) -> jax.Array:
+def compression_rate_symed(n_pieces: jax.Array, n_points) -> jax.Array:
     """CR_SymED = (bytes(P)/2) / bytes(T)  [paper Eq. 3].
 
     One 4-byte float is transmitted per piece (the endpoint); raw points are
     4-byte floats, so CR = n/N.  (The one-off 4-byte t0 "hello" is excluded,
     matching the paper's formula; see benchmarks for the +4B variant.)
+    ``n_points`` may be a static int or a traced scalar (the streaming
+    receiver carries the observed stream length in its state).
     """
-    return n_pieces.astype(jnp.float32) / jnp.float32(n_points)
+    return n_pieces.astype(jnp.float32) / jnp.asarray(n_points, jnp.float32)
 
 
 def compression_rate_abba(
@@ -91,6 +93,6 @@ def compression_rate_abba(
     return num / (4.0 * jnp.float32(n_points))
 
 
-def drr(n_symbols: jax.Array, n_points: int) -> jax.Array:
-    """Dimension-reduction rate len(S)/len(T)."""
-    return n_symbols.astype(jnp.float32) / jnp.float32(n_points)
+def drr(n_symbols: jax.Array, n_points) -> jax.Array:
+    """Dimension-reduction rate len(S)/len(T) (``n_points`` may be traced)."""
+    return n_symbols.astype(jnp.float32) / jnp.asarray(n_points, jnp.float32)

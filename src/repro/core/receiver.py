@@ -12,6 +12,13 @@ piece locally:
 
 ``compact_events`` turns the sender's per-step event arrays into padded
 per-piece buffers -- this is the scatter that model the sender->receiver wire.
+``compact_chunk`` / ``append_tail`` are the resumable pieces of the same
+scatter: the streaming receiver (``repro.core.symed.symed_receive_chunk``)
+applies ``compact_chunk`` per arriving window, carrying only the padded
+buffers + counters across chunk boundaries, and ``append_tail`` folds the
+sender's trailing flush in at end-of-stream.  ``compact_events`` is written
+*in terms of* those two helpers so the whole-stream and streaming paths stay
+bitwise-identical by construction.
 """
 from __future__ import annotations
 
@@ -20,7 +27,64 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["compact_events", "pieces_from_wire"]
+__all__ = ["append_tail", "compact_chunk", "compact_events", "pieces_from_wire"]
+
+
+def compact_chunk(
+    endpoints: jax.Array,
+    steps: jax.Array,
+    n_pieces: jax.Array,
+    emit: jax.Array,
+    chunk_endpoints: jax.Array,
+    step_idx: jax.Array,
+):
+    """Scatter one window's emissions into the receiver's padded wire buffers.
+
+    Args:
+      endpoints/steps: (n_max,) wire buffers accumulated so far.
+      n_pieces: () i32 pieces already compacted (next free slot).
+      emit: (C,) bool per-step emission flags of the window.
+      chunk_endpoints: (C,) f32 transmitted endpoints (0 where emit=False).
+      step_idx: (C,) i32 *global* stream step of each window slot.
+
+    Returns ``(endpoints, steps, n_pieces)`` updated; pieces beyond the
+    ``n_max`` capacity are dropped, exactly like ``compact_events``.
+    """
+    n_max = endpoints.shape[0]
+    pos = n_pieces + jnp.cumsum(emit.astype(jnp.int32)) - 1  # slot per step
+    slot = jnp.where(emit, pos, n_max)                       # OOB rows dropped
+    endpoints = endpoints.at[slot].set(chunk_endpoints, mode="drop")
+    steps = steps.at[slot].set(step_idx, mode="drop")
+    n_new = jnp.minimum(n_pieces + jnp.sum(emit.astype(jnp.int32)), n_max)
+    return endpoints, steps, n_new
+
+
+def append_tail(
+    endpoints: jax.Array,
+    steps: jax.Array,
+    n_pieces: jax.Array,
+    tail,
+    t_len: jax.Array,
+):
+    """Fold the sender's trailing flush into the wire buffers.
+
+    The open segment [seg_start .. t_{T-1}] arrives as a final piece,
+    conceptually emitted "at step T" (``t_len``).  No-op when ``tail.emit``
+    is False or the buffer is full.
+    """
+    n_max = endpoints.shape[0]
+    endpoints = jnp.where(
+        jnp.arange(n_max) == n_pieces,
+        jnp.where(tail.emit, tail.endpoint, endpoints[jnp.minimum(n_pieces, n_max - 1)]),
+        endpoints,
+    )
+    steps = jnp.where(
+        jnp.arange(n_max) == n_pieces,
+        jnp.where(tail.emit, t_len, steps[jnp.minimum(n_pieces, n_max - 1)]),
+        steps,
+    )
+    n_final = jnp.minimum(n_pieces + tail.emit.astype(jnp.int32), n_max)
+    return endpoints, steps, n_final
 
 
 @functools.partial(jax.jit, static_argnames=("n_max",))
@@ -42,31 +106,17 @@ def compact_events(events: dict, *, n_max: int, t0: jax.Array) -> dict:
     """
     emit = events["emit"]
     t_len = emit.shape[-1]
-    pos = jnp.cumsum(emit.astype(jnp.int32)) - 1          # piece slot per step
-    slot = jnp.where(emit, pos, n_max)                    # OOB rows dropped
-
-    endpoints = jnp.zeros((n_max,), jnp.float32).at[slot].set(
-        events["endpoint"], mode="drop"
+    endpoints, steps, n_emitted = compact_chunk(
+        jnp.zeros((n_max,), jnp.float32),
+        jnp.zeros((n_max,), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        emit,
+        events["endpoint"],
+        jnp.arange(t_len, dtype=jnp.int32),
     )
-    steps = jnp.zeros((n_max,), jnp.int32).at[slot].set(
-        jnp.arange(t_len, dtype=jnp.int32), mode="drop"
+    endpoints, steps, n_pieces = append_tail(
+        endpoints, steps, n_emitted, events["tail"], t_len
     )
-    n_emitted = jnp.minimum(jnp.sum(emit.astype(jnp.int32)), n_max)
-
-    # trailing flush: the open segment [seg_start .. t_{T-1}] as a final piece,
-    # conceptually emitted "at step T"
-    tail = events["tail"]
-    endpoints = jnp.where(
-        jnp.arange(n_max) == n_emitted,
-        jnp.where(tail.emit, tail.endpoint, endpoints[jnp.minimum(n_emitted, n_max - 1)]),
-        endpoints,
-    )
-    steps = jnp.where(
-        jnp.arange(n_max) == n_emitted,
-        jnp.where(tail.emit, t_len, steps[jnp.minimum(n_emitted, n_max - 1)]),
-        steps,
-    )
-    n_pieces = jnp.minimum(n_emitted + tail.emit.astype(jnp.int32), n_max)
 
     lens, incs = pieces_from_wire(endpoints, steps, n_pieces, t0)
     return {

@@ -7,12 +7,27 @@ returns symbols, pieces, centers plus wire-traffic accounting.
 ``symed_batch`` vmaps it over a fleet slab (the distributed runtime in
 ``repro.launch.fleet`` shards slabs over the mesh ``data`` axis with
 shard_map).
+
+Three ingestion shapes, all bitwise-equal at end-of-stream (tested):
+
+  * **whole-stream** -- ``symed_encode(ts)``: one shot;
+  * **chunked sender** -- ``symed_encode_chunk`` windows + ``symed_finish``:
+    the sender is online (O(1) carry) but per-step events accumulate until a
+    single digitize at the end;
+  * **streaming receiver** -- ``symed_step_chunk``/``symed_receive_chunk``
+    windows + ``symed_receive_finish``: *both* sides are online.  A
+    ``ReceiverState`` carries the compressor, the padded wire buffers, and a
+    resumable ``DigitizerState`` across windows; with
+    ``digitize_every_k = k`` the digitizer runs over the newly arrived pieces
+    every ``k`` windows, so symbols stream out of the receiver while the
+    stream is still arriving (the paper's 42ms/symbol deployment shape).
+    Total receiver memory is O(n_max), independent of stream length.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,16 +36,24 @@ from repro.core.compress import (
     CompressorState, PieceEvent, compress_stream, compressor_finalize,
     compressor_init, compressor_step,
 )
-from repro.core.digitize import digitize_pieces
+from repro.core.digitize import (
+    DigitizerState, digitize_pieces, digitize_span, digitizer_init,
+)
 from repro.core.metrics import compression_rate_symed, drr, dtw_ref
-from repro.core.receiver import compact_events
+from repro.core.receiver import (
+    append_tail, compact_chunk, compact_events, pieces_from_wire,
+)
 from repro.core.reconstruct import reconstruct_from_pieces, reconstruct_from_symbols
 
 __all__ = [
+    "ReceiverState",
     "SymEDConfig",
     "symed_encode",
     "symed_encode_chunk",
     "symed_finish",
+    "symed_step_chunk",
+    "symed_receive_chunk",
+    "symed_receive_finish",
     "symed_batch",
     "symbols_to_string",
 ]
@@ -57,13 +80,18 @@ class SymEDConfig:
 
 
 def _receive(
-    events, key, ts, t_len, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct
+    events, key, ts, t_len, n_points, *, tol, scl, n_max, k_min, k_max,
+    lloyd_iters, reconstruct
 ):
     """Wire -> receiver: compact, digitize, score.  Shared by the whole-stream
     (``_encode``) and chunked (``_finish``) paths so their outputs stay
     identical by construction.  ``events`` must carry per-step ``emit`` /
-    ``endpoint`` plus the trailing-flush ``tail``; ``t_len`` is the true
-    stream length (``ts`` may be just ``ts[:1]`` when not reconstructing)."""
+    ``endpoint`` plus the trailing-flush ``tail``; ``t_len`` is the static
+    stream length (``ts`` may be just ``ts[:1]`` when not reconstructing).
+    ``n_points`` is the same length as a *runtime* scalar: the cr/drr
+    divisions must see a runtime divisor, or XLA strength-reduces them to
+    reciprocal multiplies and the results drift one ulp from the streaming
+    receiver (which divides by the ``t_seen`` carried in its state)."""
     # --- wire ---------------------------------------------------------------
     wire = compact_events(events, n_max=n_max, t0=ts[0])
     # --- receiver (edge node) ----------------------------------------------
@@ -82,8 +110,8 @@ def _receive(
         "pieces_inc": wire["incs"],
         "n_pieces": wire["n_pieces"],
         "wire_bytes": 4.0 + 4.0 * wire["n_pieces"].astype(jnp.float32),
-        "cr": compression_rate_symed(wire["n_pieces"], t_len),
-        "drr": drr(wire["n_pieces"], t_len),
+        "cr": compression_rate_symed(wire["n_pieces"], n_points),
+        "drr": drr(wire["n_pieces"], n_points),
     }
     if reconstruct:
         rec_p = reconstruct_from_pieces(
@@ -104,14 +132,15 @@ def _receive(
     static_argnames=("len_max", "n_max", "k_min", "k_max", "lloyd_iters", "reconstruct"),
 )
 def _encode(
-    ts, key, *, tol, alpha, scl, len_max, n_max, k_min, k_max, lloyd_iters, reconstruct
+    ts, key, n_points, *, tol, alpha, scl, len_max, n_max, k_min, k_max,
+    lloyd_iters, reconstruct
 ):
     ts = jnp.asarray(ts, jnp.float32)
 
     # --- sender (IoT node) -------------------------------------------------
     events = compress_stream(ts, tol=tol, len_max=len_max, alpha=alpha)
     return _receive(
-        events, key, ts, ts.shape[-1], tol=tol, scl=scl, n_max=n_max,
+        events, key, ts, ts.shape[-1], n_points, tol=tol, scl=scl, n_max=n_max,
         k_min=k_min, k_max=k_max, lloyd_iters=lloyd_iters, reconstruct=reconstruct,
     )
 
@@ -120,8 +149,10 @@ def symed_encode(
     ts: jax.Array, cfg: SymEDConfig, key: jax.Array, reconstruct: bool = True
 ) -> Dict[str, jax.Array]:
     """Encode one stream ``(T,)``; optionally reconstruct + score both modes."""
+    ts = jnp.asarray(ts, jnp.float32)
     return _encode(
-        ts, key, tol=cfg.tol, alpha=cfg.alpha, scl=cfg.scl,
+        ts, key, jnp.asarray(ts.shape[-1], jnp.int32),
+        tol=cfg.tol, alpha=cfg.alpha, scl=cfg.scl,
         len_max=cfg.len_max, n_max=cfg.n_max, k_min=cfg.k_min, k_max=cfg.k_max,
         lloyd_iters=cfg.lloyd_iters, reconstruct=reconstruct,
     )
@@ -182,11 +213,12 @@ def symed_encode_chunk(
     static_argnames=("n_max", "k_min", "k_max", "lloyd_iters", "reconstruct"),
 )
 def _finish(
-    events, state, key, ts, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct
+    events, state, key, ts, n_points, *, tol, scl, n_max, k_min, k_max,
+    lloyd_iters, reconstruct
 ):
     tail = compressor_finalize(state)
     return _receive(
-        {**events, "tail": tail}, key, ts, events["emit"].shape[-1],
+        {**events, "tail": tail}, key, ts, events["emit"].shape[-1], n_points,
         tol=tol, scl=scl, n_max=n_max, k_min=k_min, k_max=k_max,
         lloyd_iters=lloyd_iters, reconstruct=reconstruct,
     )
@@ -209,7 +241,233 @@ def symed_finish(
     """
     return _finish(
         events, state, key, jnp.asarray(ts, jnp.float32),
+        jnp.asarray(events["emit"].shape[-1], jnp.int32),
         tol=cfg.tol, scl=cfg.scl, n_max=cfg.n_max, k_min=cfg.k_min,
+        k_max=cfg.k_max, lloyd_iters=cfg.lloyd_iters, reconstruct=reconstruct,
+    )
+
+
+class ReceiverState(NamedTuple):
+    """Full online SymED state for one stream: sender + wire + receiver.
+
+    ``comp`` is the O(1) sender carry; ``endpoints``/``steps``/``n_pieces``
+    are the receiver's padded wire-compaction buffers (what arrived, and
+    when); ``dig`` is the resumable digitizer (``dig.n`` pieces of the buffer
+    have been digitized so far); ``symbols_online`` accumulates the symbol
+    emitted when each piece was first digitized.  ``t0``/``t_seen``/``chunks``
+    anchor the wire ("hello" payload, global step clock, cadence counter).
+    """
+
+    comp: CompressorState
+    dig: DigitizerState
+    endpoints: jax.Array       # (n_max,) f32 transmitted endpoints
+    steps: jax.Array           # (n_max,) i32 arrival step per piece
+    n_pieces: jax.Array        # () i32 pieces compacted so far
+    symbols_online: jax.Array  # (n_max,) i32 symbol at first digitization
+    t0: jax.Array              # () f32 first raw point (the "hello")
+    t_seen: jax.Array          # () i32 stream points ingested so far
+    chunks: jax.Array          # () i32 windows ingested so far
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "len_max", "n_max", "k_min", "k_max", "lloyd_iters",
+        "digitize_every_k", "first",
+    ),
+)
+def _receive_chunk(
+    chunk, state, key, *, tol, alpha, scl, len_max, n_max, k_min, k_max,
+    lloyd_iters, digitize_every_k, first,
+):
+    chunk = jnp.asarray(chunk, jnp.float32)
+    if first:
+        state = ReceiverState(
+            comp=compressor_init(chunk[0]),
+            dig=digitizer_init(n_max, k_max, key),
+            endpoints=jnp.zeros((n_max,), jnp.float32),
+            steps=jnp.zeros((n_max,), jnp.int32),
+            n_pieces=jnp.zeros((), jnp.int32),
+            symbols_online=jnp.zeros((n_max,), jnp.int32),
+            t0=chunk[0],
+            t_seen=jnp.ones((), jnp.int32),
+            chunks=jnp.zeros((), jnp.int32),
+        )
+        xs = chunk[1:]
+    else:
+        xs = chunk
+
+    # --- sender: same scan step as compress_stream / symed_encode_chunk ----
+    def step(s, t):
+        return compressor_step(s, t, tol=tol, len_max=len_max, alpha=alpha)
+
+    comp, events = jax.lax.scan(step, state.comp, xs)
+
+    # --- wire: scatter this window's emissions into the padded buffers -----
+    step_idx = state.t_seen + jnp.arange(xs.shape[0], dtype=jnp.int32)
+    endpoints, steps, n_pieces = compact_chunk(
+        state.endpoints, state.steps, state.n_pieces,
+        events.emit, events.endpoint, step_idx,
+    )
+    t_seen = state.t_seen + xs.shape[0]
+    chunks = state.chunks + 1
+
+    # --- receiver: digitize the newly arrived pieces every k windows -------
+    if digitize_every_k:
+        def digitize(dig, symbols_online):
+            lens, incs = pieces_from_wire(endpoints, steps, n_pieces, state.t0)
+            dig_new, span_syms = digitize_span(
+                dig, lens, incs, dig.n, n_pieces, tol=tol, scl=scl,
+                k_min=k_min, k_max_active=k_max, lloyd_iters=lloyd_iters,
+            )
+            idx = jnp.arange(n_max)
+            in_span = (idx >= dig.n) & (idx < n_pieces)
+            return dig_new, jnp.where(in_span, span_syms, symbols_online)
+
+        def skip(dig, symbols_online):
+            return dig, symbols_online
+
+        dig, symbols_online = jax.lax.cond(
+            chunks % digitize_every_k == 0, digitize, skip,
+            state.dig, state.symbols_online,
+        )
+    else:
+        dig, symbols_online = state.dig, state.symbols_online
+
+    new_state = ReceiverState(
+        comp=comp, dig=dig, endpoints=endpoints, steps=steps,
+        n_pieces=n_pieces, symbols_online=symbols_online,
+        t0=state.t0, t_seen=t_seen, chunks=chunks,
+    )
+    info = {
+        "n_pieces": n_pieces,
+        "n_digitized": dig.n,
+        "symbols_online": symbols_online,
+    }
+    return new_state, info
+
+
+def symed_receive_chunk(
+    ts_chunk: jax.Array,
+    cfg: SymEDConfig,
+    state: Optional[ReceiverState] = None,
+    key: Optional[jax.Array] = None,
+    *,
+    digitize_every_k: int = 1,
+) -> Tuple[ReceiverState, Dict[str, jax.Array]]:
+    """Fully-online step: ingest one ``(C,)`` window, sender *and* receiver.
+
+    ``state=None`` opens the stream (``key`` is then required -- it seeds the
+    digitizer exactly like the ``symed_finish`` path).  Every call compresses
+    the window and wire-compacts the emitted pieces; every
+    ``digitize_every_k``-th call additionally digitizes the pieces that
+    arrived since the last digitization, so symbols stream out while the
+    stream is still arriving.  ``digitize_every_k=0`` defers all digitization
+    to ``symed_receive_finish`` (the pure ``symed_step_chunk`` behavior).
+
+    End-of-stream outputs (via ``symed_receive_finish``) are bitwise-equal to
+    ``symed_encode`` / ``symed_finish`` on the same stream for *any* window
+    split and cadence -- the digitizer state evolution depends only on the
+    piece arrival order, never on when it runs (tested in
+    ``tests/test_streaming_receiver.py``).
+
+    Returns ``(state, info)``: ``info["n_pieces"]`` pieces arrived so far, of
+    which ``info["n_digitized"]`` have symbols in ``info["symbols_online"]``.
+
+    Single-stream semantics ((C,) windows); ``jax.vmap`` over the leading
+    axis for slabs (``repro.launch.fleet`` does exactly that).
+    """
+    if state is None and key is None:
+        raise ValueError("opening a stream (state=None) requires a PRNG key")
+    if digitize_every_k < 0:
+        raise ValueError(f"digitize_every_k must be >= 0, got {digitize_every_k}")
+    if key is None:
+        key = jax.random.key(0)  # ignored when state is not None
+    return _receive_chunk(
+        ts_chunk, state, key, tol=cfg.tol, alpha=cfg.alpha, scl=cfg.scl,
+        len_max=cfg.len_max, n_max=cfg.n_max, k_min=cfg.k_min, k_max=cfg.k_max,
+        lloyd_iters=cfg.lloyd_iters, digitize_every_k=int(digitize_every_k),
+        first=state is None,
+    )
+
+
+def symed_step_chunk(
+    ts_chunk: jax.Array,
+    cfg: SymEDConfig,
+    state: Optional[ReceiverState] = None,
+    key: Optional[jax.Array] = None,
+) -> Tuple[ReceiverState, Dict[str, jax.Array]]:
+    """Sender+wire only: ingest a window without running the digitizer.
+
+    Equivalent to ``symed_receive_chunk(..., digitize_every_k=0)``; the
+    digitizer catches up wholesale in ``symed_receive_finish``.
+    """
+    return symed_receive_chunk(ts_chunk, cfg, state, key, digitize_every_k=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_max", "k_min", "k_max", "lloyd_iters", "reconstruct"),
+)
+def _receive_finish(
+    state, ts, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct
+):
+    tail = compressor_finalize(state.comp)
+    endpoints, steps, n_pieces = append_tail(
+        state.endpoints, state.steps, state.n_pieces, tail, state.t_seen
+    )
+    lens, incs = pieces_from_wire(endpoints, steps, n_pieces, state.t0)
+    dig, span_syms = digitize_span(
+        state.dig, lens, incs, state.dig.n, n_pieces, tol=tol, scl=scl,
+        k_min=k_min, k_max_active=k_max, lloyd_iters=lloyd_iters,
+    )
+    idx = jnp.arange(n_max)
+    in_span = (idx >= state.dig.n) & (idx < n_pieces)
+    symbols_online = jnp.where(in_span, span_syms, state.symbols_online)
+
+    out = {
+        "symbols": dig.labels,
+        "symbols_online": symbols_online,
+        "centers": dig.centers,
+        "k": dig.k,
+        "pieces_len": lens,
+        "pieces_inc": incs,
+        "n_pieces": n_pieces,
+        "wire_bytes": 4.0 + 4.0 * n_pieces.astype(jnp.float32),
+        "cr": compression_rate_symed(n_pieces, state.t_seen),
+        "drr": drr(n_pieces, state.t_seen),
+    }
+    if reconstruct:
+        t_len = ts.shape[-1]
+        rec_p = reconstruct_from_pieces(lens, incs, n_pieces, state.t0, t_len)
+        rec_s = reconstruct_from_symbols(
+            dig.labels, dig.centers, n_pieces, state.t0, t_len
+        )
+        out["recon_pieces"] = rec_p
+        out["recon_symbols"] = rec_s
+        out["re_pieces"] = dtw_ref(ts, rec_p)
+        out["re_symbols"] = dtw_ref(ts, rec_s)
+    return out
+
+
+def symed_receive_finish(
+    state: ReceiverState,
+    cfg: SymEDConfig,
+    ts: Optional[jax.Array] = None,
+    reconstruct: bool = False,
+) -> Dict[str, jax.Array]:
+    """Close a streaming-receiver stream: flush the tail, digitize the rest.
+
+    Output dict matches ``symed_encode`` / ``symed_finish`` bitwise.  ``ts``
+    (the full raw stream) is only required when ``reconstruct=True`` -- unlike
+    ``symed_finish``, the receiver carries everything else (``t0``, the
+    stream length ``t_seen``) in its state.
+    """
+    if reconstruct and ts is None:
+        raise ValueError("reconstruct=True requires the raw stream ts")
+    ts = jnp.zeros((1,), jnp.float32) if ts is None else jnp.asarray(ts, jnp.float32)
+    return _receive_finish(
+        state, ts, tol=cfg.tol, scl=cfg.scl, n_max=cfg.n_max, k_min=cfg.k_min,
         k_max=cfg.k_max, lloyd_iters=cfg.lloyd_iters, reconstruct=reconstruct,
     )
 

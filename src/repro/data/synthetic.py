@@ -9,6 +9,7 @@ across families, mirroring the paper's equal-weight protocol.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, List
 
 import numpy as np
@@ -86,8 +87,15 @@ FAMILIES = {
 
 def make_dataset(family: str, n_series: int = 10, length: int = 1500,
                  seed: int = 0) -> np.ndarray:
-    """(n_series, length) f32 array for one family."""
-    rng = np.random.default_rng(seed ^ hash(family) & 0xFFFF)
+    """(n_series, length) f32 array for one family.
+
+    Seeding uses a *stable* hash of the family name (``zlib.crc32``):
+    Python's builtin ``hash`` is randomized per process (PYTHONHASHSEED), so
+    it would silently generate different "seeded" data in every subprocess,
+    breaking cross-process reproducibility (e.g. the device-count-invariance
+    checks in ``tests/test_fleet.py``).
+    """
+    rng = np.random.default_rng(seed ^ zlib.crc32(family.encode()) & 0xFFFF)
     return FAMILIES[family](rng, n_series, length).astype(np.float32)
 
 

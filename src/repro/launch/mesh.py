@@ -16,7 +16,7 @@ import jax
 
 from repro.utils.jax_compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
+__all__ = ["make_pod_data_mesh", "make_production_mesh", "make_test_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -33,6 +33,37 @@ def make_production_mesh(*, multi_pod: bool = False):
             "before importing jax"
         )
     return make_mesh(shape, axes, devices=devices)
+
+
+def make_pod_data_mesh(n_pods: int, n_data: int | None = None):
+    """2-D ``(pod, data)`` fleet mesh: ``pod`` spans DCN pod boundaries, ``data``
+    the chips within a pod.  ``n_data=None`` spreads every local device over
+    the pods (``device_count() / n_pods`` each).  ``n_pods=1`` degenerates to
+    the flat data mesh, so callers can use one code path for both layouts.
+    """
+    if n_pods < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    if n_data is None:
+        total = jax.device_count()
+        if total % n_pods:
+            raise ValueError(
+                f"{total} devices do not divide over {n_pods} pods; "
+                "pass n_data explicitly"
+            )
+        n_data = total // n_pods
+    if n_data < 1:
+        raise ValueError(
+            f"n_data must be >= 1, got {n_data} "
+            f"(more pods ({n_pods}) than devices?)"
+        )
+    n = n_pods * n_data
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh (pod={n_pods}, data={n_data}) needs {n} devices, "
+            f"have {len(devices)}"
+        )
+    return make_mesh((n_pods, n_data), ("pod", "data"), devices=devices)
 
 
 def make_test_mesh(shape: Sequence[int] = (2, 2), axes: Sequence[str] = ("data", "model")):

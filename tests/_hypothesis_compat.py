@@ -9,8 +9,8 @@ deterministic draws from miniature strategy objects, so the properties are
 checked on a fixed sample instead of being skipped wholesale.
 
 Only the strategy combinators the suite uses are implemented:
-``st.floats(lo, hi)``, ``st.integers(lo, hi)`` and
-``st.lists(elem, min_size=, max_size=)``.
+``st.floats(lo, hi)``, ``st.integers(lo, hi)``,
+``st.lists(elem, min_size=, max_size=)`` and ``st.sampled_from(seq)``.
 """
 from __future__ import annotations
 
@@ -53,6 +53,14 @@ except ImportError:
             return _Strategy(
                 lambda rng: int(rng.integers(min_value, max_value + 1)),
                 boundary=(int(min_value), int(max_value)),
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = tuple(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))],
+                boundary=elements[:2],
             )
 
         @staticmethod

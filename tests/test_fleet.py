@@ -3,8 +3,12 @@
 The chunked path must be *bitwise* identical to the whole-stream encoder
 (same fp ops in the same order; the carry is exact), and the sharded runtime
 must match ``symed_batch`` regardless of mesh layout (per-stream PRNG keys
-are split before sharding).  Multi-device coverage runs in a subprocess with
-forced host devices, mirroring ``tests/test_system.py``.
+are split before sharding) -- including the 2-D ``(pod, data)`` grid with
+hierarchical telemetry reduction and the streaming-receiver ingestion modes.
+Multi-device coverage runs in subprocesses with forced host devices,
+mirroring ``tests/test_system.py``; the CLI invariance tests assert that
+``pieces`` / ``wire_bytes`` / ``compression_rate`` totals are identical at
+--devices 1/4/8 and on a pod x data layout.
 """
 import os
 import subprocess
@@ -135,6 +139,62 @@ class TestFleetRuntime:
         with pytest.raises(ValueError, match="divide"):
             run_fleet(jnp.zeros((3, 64)), CFG, jax.random.key(0), fake_mesh)
 
+    def test_run_fleet_error_paths(self):
+        """Bad arguments fail fast with clear messages, before any tracing."""
+        import types
+
+        from repro.launch.fleet import run_fleet
+
+        fake_mesh = types.SimpleNamespace(
+            axis_names=("pod", "data"),
+            devices=np.empty((2, 2), dtype=object),
+        )
+        key = jax.random.key(0)
+        with pytest.raises(ValueError, match="chunk_len must be >= 1"):
+            run_fleet(jnp.zeros((4, 64)), CFG, key, fake_mesh, chunk_len=0,
+                      axis=("pod", "data"))
+        with pytest.raises(ValueError, match="unknown mesh axis 'model'"):
+            run_fleet(jnp.zeros((4, 64)), CFG, key, fake_mesh, axis="model")
+        with pytest.raises(ValueError, match="unknown mesh axis"):
+            run_fleet(jnp.zeros((4, 64)), CFG, key, fake_mesh,
+                      axis=("pod", "replica"))
+        with pytest.raises(ValueError, match="at least one mesh axis"):
+            run_fleet(jnp.zeros((4, 64)), CFG, key, fake_mesh, axis=())
+        with pytest.raises(ValueError, match="divide over 4 podxdata"):
+            run_fleet(jnp.zeros((6, 64)), CFG, key, fake_mesh,
+                      axis=("pod", "data"))
+        with pytest.raises(ValueError, match="digitize_every_k must be >= 0"):
+            run_fleet(jnp.zeros((4, 64)), CFG, key, fake_mesh,
+                      chunk_len=32, digitize_every_k=-1, axis=("pod", "data"))
+        with pytest.raises(ValueError, match="requires chunk_len"):
+            run_fleet(jnp.zeros((4, 64)), CFG, key, fake_mesh,
+                      digitize_every_k=2, axis=("pod", "data"))
+
+    def test_fleet_report_edge_cases(self):
+        """Empty fleets (zero streams / zero points) and zero wall time never
+        divide by zero; rates clamp to finite values."""
+        from repro.launch.fleet import fleet_report
+
+        zero = {k: 0.0 for k in
+                ("streams", "points", "pieces", "wire_bytes", "raw_bytes")}
+        rep = fleet_report(zero, 0.0)
+        for k, v in rep.items():
+            assert np.isfinite(v), (k, v)
+        assert rep["compression_rate"] == 0.0
+        assert rep["mean_pieces_per_stream"] == 0.0
+        assert rep["points_per_s"] == 0.0
+
+        # zero pieces but nonzero points: latency clamps, cr well-defined
+        rep = fleet_report({**zero, "streams": 2.0, "points": 128.0,
+                            "raw_bytes": 512.0, "wire_bytes": 4.0}, 1.0)
+        assert rep["ms_per_symbol"] == 1e3
+        assert rep["compression_rate"] == pytest.approx(4.0 / 512.0)
+
+        # normal case: latency is wall / pieces
+        rep = fleet_report({"streams": 1.0, "points": 100.0, "pieces": 50.0,
+                            "wire_bytes": 204.0, "raw_bytes": 400.0}, 2.1)
+        assert rep["ms_per_symbol"] == pytest.approx(2.1e3 / 50.0)
+
     def test_sharded_matches_batch_on_2x2_mesh(self, tmp_path):
         """shard_map over the data axis of a (2,2) mesh reproduces
         symed_batch exactly (subprocess: forced host devices)."""
@@ -171,6 +231,52 @@ print("FLEET_SHARD_OK")
         assert "FLEET_SHARD_OK" in out.stdout, (out.stdout[-500:],
                                                 out.stderr[-2000:])
 
+    def test_pod_data_mesh_matches_batch(self):
+        """Acceptance: a 2-D (pod, data) run_fleet reproduces single-device
+        results and telemetry totals exactly -- hierarchical psum (data
+        within a pod, then across pods) over 2x2 == flat 1-device totals.
+        Subprocess: forced host devices."""
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.symed import SymEDConfig, symed_batch
+from repro.launch.mesh import make_pod_data_mesh
+from repro.launch.fleet import fleet_data_mesh, run_fleet
+
+cfg = SymEDConfig(tol=0.5, alpha=0.01, n_max=128, k_max=16, len_max=64)
+rng = np.random.default_rng(11)
+slab = jnp.asarray(np.cumsum(rng.normal(0, 0.3, (8, 256)), axis=1),
+                   jnp.float32)
+ref = symed_batch(slab, cfg, jax.random.key(7), reconstruct=False)
+
+mesh1 = fleet_data_mesh(1)
+_, ref_tele = run_fleet(slab, cfg, jax.random.key(7), mesh1,
+                        chunk_len=64, digitize_every_k=1, reconstruct=False)
+
+pods = make_pod_data_mesh(2, 2)
+for chunk_len, dk in ((None, None), (64, 1)):
+    out, tele = run_fleet(slab, cfg, jax.random.key(7), pods,
+                          chunk_len=chunk_len, digitize_every_k=dk,
+                          reconstruct=False, axis=("pod", "data"))
+    np.testing.assert_array_equal(np.asarray(out["symbols"]),
+                                  np.asarray(ref["symbols"]))
+    np.testing.assert_array_equal(np.asarray(out["symbols_online"]),
+                                  np.asarray(ref["symbols_online"]))
+    np.testing.assert_array_equal(np.asarray(out["n_pieces"]),
+                                  np.asarray(ref["n_pieces"]))
+    np.testing.assert_array_equal(np.asarray(out["centers"]),
+                                  np.asarray(ref["centers"]))
+    for k in ref_tele:
+        assert float(tele[k]) == float(ref_tele[k]), (k, tele[k], ref_tele[k])
+print("FLEET_POD_OK")
+"""
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, env=env, cwd=REPO, timeout=560)
+        assert "FLEET_POD_OK" in out.stdout, (out.stdout[-500:],
+                                              out.stderr[-2000:])
+
     @pytest.mark.slow
     def test_cli_entrypoint(self):
         """`python -m repro.launch.fleet` dry-runs on forced host devices and
@@ -185,3 +291,81 @@ print("FLEET_SHARD_OK")
         assert "compression rate" in out.stdout
         assert "pieces/s" in out.stdout
         assert "devices / data shards   : 2" in out.stdout
+        assert "symbol latency" in out.stdout
+
+
+def _parse_fleet_stdout(stdout: str) -> dict:
+    """Extract the layout-invariant telemetry totals from the CLI report."""
+    vals = {}
+    for line in stdout.splitlines():
+        if ":" not in line:
+            continue
+        name, _, rest = line.partition(":")
+        name, rest = name.strip(), rest.strip()
+        if name == "fleet pieces":
+            vals["pieces"] = int(rest.split()[0])
+        elif name == "fleet wire bytes":
+            vals["wire_bytes"] = int(rest.split()[0].replace(",", ""))
+        elif name == "fleet raw bytes":
+            vals["raw_bytes"] = int(rest.split()[0].replace(",", ""))
+        elif name == "compression rate":
+            vals["compression_rate"] = float(rest.split()[0])
+    return vals
+
+
+class TestCLI:
+    @staticmethod
+    def _run(*args, timeout=560):
+        env = dict(os.environ, PYTHONPATH="src")
+        return subprocess.run(
+            [sys.executable, "-m", "repro.launch.fleet", *args],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=timeout,
+        )
+
+    @pytest.mark.slow
+    def test_device_count_invariance(self):
+        """The fleet's pieces / wire_bytes / compression_rate totals are
+        invariant to the device layout: 1, 4, and 8 data shards, and a
+        2x2 pod x data grid, all report identical numbers (per-stream PRNG
+        keys are split before sharding; psums add exact integer-valued
+        floats)."""
+        base = ["--streams", "8", "--length", "192", "--chunk", "64"]
+        runs = {
+            "devices1": self._run(*base, "--devices", "1"),
+            "devices4": self._run(*base, "--devices", "4"),
+            "devices8": self._run(*base, "--devices", "8"),
+            "pods2x2": self._run(*base, "--devices", "4", "--pods", "2",
+                                 "--digitize-every", "1"),
+        }
+        parsed = {}
+        for name, proc in runs.items():
+            assert proc.returncode == 0, (name, proc.stdout[-500:],
+                                          proc.stderr[-2000:])
+            parsed[name] = _parse_fleet_stdout(proc.stdout)
+            assert set(parsed[name]) == {"pieces", "wire_bytes", "raw_bytes",
+                                         "compression_rate"}, (name,
+                                                               proc.stdout)
+        ref = parsed["devices1"]
+        for name, vals in parsed.items():
+            assert vals == ref, (name, vals, ref)
+
+    def test_rejects_chunk_larger_than_length(self):
+        out = self._run("--streams", "4", "--length", "128", "--chunk", "256",
+                        "--devices", "1")
+        assert out.returncode != 0
+        assert "exceeds --length" in out.stderr
+
+    def test_rejects_negative_tol(self):
+        out = self._run("--streams", "4", "--length", "128",
+                        "--tol", "-0.5", "--devices", "1")
+        assert out.returncode != 0
+        assert "--tol must be > 0" in out.stderr
+
+    def test_rejects_bad_cadence_and_pods(self):
+        out = self._run("--digitize-every", "2", "--devices", "1")
+        assert out.returncode != 0
+        assert "--digitize-every requires --chunk" in out.stderr
+
+        out = self._run("--devices", "4", "--pods", "3")
+        assert out.returncode != 0
+        assert "must divide over" in out.stderr

@@ -1,0 +1,188 @@
+"""Streaming-receiver equivalence battery.
+
+The online receiver (``ReceiverState`` + ``symed_receive_chunk`` +
+``symed_receive_finish``) must be *bitwise* interchangeable with the
+whole-stream ``symed_encode`` and the chunked-sender ``symed_finish`` paths:
+same fp ops in the same order, for every stream length, window split, and
+digitize cadence.  The properties below drive random combinations through
+the hypothesis shim; stream lengths and window sizes are drawn from small
+palettes so the jit cache stays warm across examples.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import make_stream
+
+from repro.core.symed import (
+    SymEDConfig, symed_encode, symed_encode_chunk, symed_finish,
+    symed_receive_chunk, symed_receive_finish, symed_step_chunk,
+)
+
+# small capacities keep per-shape compiles cheap; both paths share the config
+CFG = SymEDConfig(tol=0.5, alpha=0.02, scl=1.0, k_min=3, k_max=8,
+                  len_max=32, n_max=64, lloyd_iters=5)
+
+T_LENS = (96, 128, 160)     # palettes bound the number of distinct jit traces
+CHUNKS = (17, 32, 48)
+
+
+def stream_encode(ts, cfg, key, chunk_len, digitize_every_k, reconstruct=False):
+    """Reference driver: feed ``ts`` through the streaming receiver in
+    ``chunk_len`` windows, digitizing every ``digitize_every_k`` windows."""
+    state = None
+    for c in range(0, ts.shape[-1], chunk_len):
+        window = ts[..., c: c + chunk_len]
+        if state is None:
+            state, info = symed_receive_chunk(
+                window, cfg, None, key, digitize_every_k=digitize_every_k)
+        else:
+            state, info = symed_receive_chunk(
+                window, cfg, state, digitize_every_k=digitize_every_k)
+    return symed_receive_finish(
+        state, cfg, ts if reconstruct else None, reconstruct)
+
+
+def assert_outputs_equal(a, b, context=""):
+    assert set(a) == set(b), (context, set(a) ^ set(b))
+    for name in a:
+        np.testing.assert_array_equal(
+            np.asarray(a[name]), np.asarray(b[name]),
+            err_msg=f"{context}: {name}")
+
+
+class TestStreamingEquivalence:
+    @given(st.sampled_from(T_LENS), st.sampled_from(CHUNKS),
+           st.integers(1, 4), st.integers(0, 3))
+    @settings(max_examples=30, deadline=None)
+    def test_bitwise_equals_whole_stream(self, t_len, chunk_len, cadence, seed):
+        """For random lengths, window splits, and digitize cadences, the
+        streaming receiver's end-of-stream symbols/centers/telemetry are
+        bitwise-equal to one-shot symed_encode."""
+        rng = np.random.default_rng(1000 + seed)
+        ts = jnp.asarray(make_stream(rng, t_len))
+        key = jax.random.key(seed)
+        whole = symed_encode(ts, CFG, key, reconstruct=False)
+        streamed = stream_encode(ts, CFG, key, chunk_len, cadence)
+        assert_outputs_equal(
+            whole, streamed,
+            f"T={t_len} C={chunk_len} k={cadence} seed={seed}")
+
+    @given(st.sampled_from(CHUNKS), st.integers(0, 2))
+    @settings(max_examples=15, deadline=None)
+    def test_bitwise_equals_symed_finish(self, chunk_len, seed):
+        """Acceptance: streaming end-of-stream == the chunked-sender
+        symed_finish path on the same stream (the battery's anchor)."""
+        rng = np.random.default_rng(2000 + seed)
+        ts = jnp.asarray(make_stream(rng, 128))
+        key = jax.random.key(seed)
+
+        state, parts = None, []
+        for c in range(0, 128, chunk_len):
+            state, ev = symed_encode_chunk(ts[c: c + chunk_len], CFG, state)
+            parts.append(ev)
+        events = {k: jnp.concatenate([p[k] for p in parts], axis=-1)
+                  for k in parts[0]}
+        finish = symed_finish(events, state, CFG, key, ts, reconstruct=False)
+
+        streamed = stream_encode(ts, CFG, key, chunk_len, digitize_every_k=1)
+        assert_outputs_equal(finish, streamed, f"C={chunk_len} seed={seed}")
+
+    @given(st.sampled_from(T_LENS), st.sampled_from(CHUNKS))
+    @settings(max_examples=12, deadline=None)
+    def test_cadence_invariance(self, t_len, chunk_len):
+        """The digitize cadence only changes *when* symbols emerge, never the
+        end-of-stream state: every k (and the defer-to-finish k=0 path via
+        symed_step_chunk) agrees bitwise."""
+        rng = np.random.default_rng(t_len * 31 + chunk_len)
+        ts = jnp.asarray(make_stream(rng, t_len))
+        key = jax.random.key(1)
+        ref = stream_encode(ts, CFG, key, chunk_len, digitize_every_k=1)
+        for cadence in (2, 3):
+            assert_outputs_equal(
+                ref, stream_encode(ts, CFG, key, chunk_len, cadence),
+                f"k={cadence}")
+        state = None
+        for c in range(0, t_len, chunk_len):
+            state, _ = symed_step_chunk(ts[c: c + chunk_len], CFG, state, key)
+        assert_outputs_equal(
+            ref, symed_receive_finish(state, CFG), "step_chunk+finish")
+
+    def test_reconstruct_bitwise_equal(self, rng):
+        """The reconstruction/DTW outputs agree too (needs the raw stream)."""
+        ts = jnp.asarray(make_stream(rng, 160))
+        key = jax.random.key(5)
+        whole = symed_encode(ts, CFG, key, reconstruct=True)
+        streamed = stream_encode(ts, CFG, key, 48, 2, reconstruct=True)
+        assert_outputs_equal(whole, streamed, "reconstruct")
+
+    def test_online_symbols_stream_out_incrementally(self, rng):
+        """With cadence k=1 every window's digitized prefix is final: the
+        symbols visible after each window are a prefix of the whole-stream
+        ``symbols_online`` (this is what makes the receiver *online*)."""
+        ts = jnp.asarray(make_stream(rng, 160))
+        key = jax.random.key(9)
+        whole = symed_encode(ts, CFG, key, reconstruct=False)
+        ref_online = np.asarray(whole["symbols_online"])
+
+        state, seen = None, 0
+        for c in range(0, 160, 32):
+            if state is None:
+                state, info = symed_receive_chunk(
+                    ts[c: c + 32], CFG, None, key, digitize_every_k=1)
+            else:
+                state, info = symed_receive_chunk(
+                    ts[c: c + 32], CFG, state, digitize_every_k=1)
+            n_dig = int(info["n_digitized"])
+            assert n_dig >= seen, "digitized count must be monotone"
+            assert n_dig == int(info["n_pieces"]), "k=1 leaves no backlog"
+            np.testing.assert_array_equal(
+                np.asarray(info["symbols_online"])[:n_dig],
+                ref_online[:n_dig],
+                err_msg=f"prefix after window ending at {c + 32}")
+            seen = n_dig
+        out = symed_receive_finish(state, CFG)
+        assert int(out["n_pieces"]) >= seen
+
+    def test_open_stream_requires_key(self):
+        with pytest.raises(ValueError, match="requires a PRNG key"):
+            symed_receive_chunk(jnp.zeros(8), CFG, None, None)
+
+    def test_negative_cadence_rejected(self):
+        with pytest.raises(ValueError, match="digitize_every_k"):
+            symed_receive_chunk(jnp.zeros(8), CFG, None, jax.random.key(0),
+                                digitize_every_k=-1)
+
+    def test_reconstruct_requires_stream(self, rng):
+        ts = jnp.asarray(make_stream(rng, 64))
+        state, _ = symed_receive_chunk(ts, CFG, None, jax.random.key(0))
+        with pytest.raises(ValueError, match="requires the raw stream"):
+            symed_receive_finish(state, CFG, None, reconstruct=True)
+
+    def test_vmapped_streaming_matches_single(self, rng):
+        """The receiver vmaps over a slab (the fleet's shard body)."""
+        slab = jnp.asarray(np.stack([make_stream(rng, 128) for _ in range(3)]))
+        keys = jax.random.split(jax.random.key(2), 3)
+        state = None
+        for c in range(0, 128, 32):
+            if state is None:
+                state, _ = jax.vmap(
+                    lambda w, k: symed_receive_chunk(w, CFG, None, k,
+                                                     digitize_every_k=2)
+                )(slab[:, c: c + 32], keys)
+            else:
+                state, _ = jax.vmap(
+                    lambda w, s: symed_receive_chunk(w, CFG, s,
+                                                     digitize_every_k=2)
+                )(slab[:, c: c + 32], state)
+        out = jax.vmap(
+            lambda s: symed_receive_finish(s, CFG, None, False))(state)
+        for i in range(3):
+            single = symed_encode(slab[i], CFG, keys[i], reconstruct=False)
+            for name in ("symbols", "symbols_online", "centers", "n_pieces",
+                         "k", "cr"):
+                np.testing.assert_array_equal(
+                    np.asarray(out[name][i]), np.asarray(single[name]),
+                    err_msg=f"stream {i}: {name}")
