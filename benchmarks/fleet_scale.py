@@ -7,15 +7,18 @@ the 2-D ``(pod, data)`` layout with hierarchical telemetry reduction (on the
 the local device count)."""
 from __future__ import annotations
 
+import time
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.symed import SymEDConfig, symed_batch
 from repro.data.synthetic import make_fleet
 from repro.launch.fleet import fleet_data_mesh, fleet_report, run_fleet
 from repro.launch.mesh import make_pod_data_mesh
+from repro.launch.stream import StreamServer
 
 from benchmarks.common import timed
 
@@ -99,5 +102,50 @@ def run() -> Tuple[List[tuple], dict]:
         "layout": f"{n_pods}x{n_dev // n_pods}",
         "fleet_compression_rate": rep["compression_rate"],
         "ms_per_symbol": rep["ms_per_symbol"],
+    }
+
+    # sessions-resident service vs slab re-run: the same arrival tick (every
+    # stream delivers one W-point window) costs one donated batched table
+    # step when the ReceiverState stays resident (repro.launch.stream), vs a
+    # full re-encode of the materialized slab when it doesn't -- the
+    # batch-replay anti-pattern a naive service falls into at steady state.
+    svc_streams, svc_len, svc_win = round_up(8), 256, 64
+    slab_np = np.asarray(make_fleet(svc_streams, svc_len, seed=3))
+    server = StreamServer(cfg, max_sessions=svc_streams, window_cap=svc_win,
+                          digitize_every_k=1)
+    sids = [f"s{i}" for i in range(svc_streams)]
+    for sid in sids:
+        server.open(sid)
+
+    def tick(c):
+        server.ingest_many(
+            {sid: slab_np[i, c: c + svc_win] for i, sid in enumerate(sids)})
+
+    tick(0)  # compiles the donated step; steady state is what we meter
+    n_ticks = (svc_len - svc_win) // svc_win
+    t0 = time.perf_counter()
+    for c in range(svc_win, svc_len, svc_win):
+        tick(c)
+    dt_resident = (time.perf_counter() - t0) / max(n_ticks, 1)
+    for sid in sids:
+        server.close(sid)
+
+    slab = jnp.asarray(slab_np)
+    _, dt_slab = timed(
+        lambda: symed_batch(slab, cfg, jax.random.key(0), reconstruct=False),
+        warmup=1, iters=2,
+    )
+    pts_tick = svc_streams * svc_win
+    rows.append((f"service_resident_tick_{svc_streams}x{svc_len}_w{svc_win}",
+                 1e6 * dt_resident, pts_tick / dt_resident))
+    rows.append((f"service_slab_rerun_tick_{svc_streams}x{svc_len}",
+                 1e6 * dt_slab, pts_tick / dt_slab))
+    summary["stream_service"] = {
+        "sessions": svc_streams,
+        "window": svc_win,
+        "resident_tick_ms": 1e3 * dt_resident,
+        "slab_rerun_tick_ms": 1e3 * dt_slab,
+        "resident_speedup": dt_slab / max(dt_resident, 1e-12),
+        "wire_out_bytes": server.totals["bytes_out"],
     }
     return rows, summary

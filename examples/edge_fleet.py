@@ -82,6 +82,8 @@ def main():
     print(f"fleet raw bytes         : {int(rep['raw_bytes']):,}")
     print(f"fleet wire bytes        : {int(rep['wire_bytes']):,} "
           f"({100 * rep['compression_rate']:.1f}% of raw)")
+    print(f"fleet wire-out bytes    : {int(rep['wire_out_bytes']):,} "
+          f"(symbol-delta frames, {rep['wire_out_ratio']:.2f}x wire in)")
     print(f"mean DTW err (pieces)   : {np.asarray(out['re_pieces']).mean():.3f}")
     print(f"mean DTW err (symbols)  : {np.asarray(out['re_symbols']).mean():.3f}")
     print(f"mean alphabet size      : {np.asarray(out['k']).mean():.1f}")

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "DigitizerState",
+    "digitizer_delta",
     "digitizer_init",
     "digitizer_step",
     "digitize_pieces",
@@ -241,6 +242,37 @@ def digitizer_step(
     new_state = jax.lax.cond(n <= k_min, trivial, cluster, state.key)
     symbol = new_state.labels[n - 1]
     return new_state, symbol
+
+
+def digitizer_delta(
+    prev_n: jax.Array,
+    state: DigitizerState,
+    symbols_online: jax.Array,
+    endpoints: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Symbol delta since ``prev_n`` pieces had been digitized.
+
+    This is the receiver's *wire-out* payload (ABBA-VSM-style downstream
+    consumers ingest the symbol stream incrementally): after a digitize pass
+    advanced ``state.n`` past ``prev_n``, slot ``i < n_new`` of the returned
+    arrays holds the symbol emitted when piece ``prev_n + i`` was first
+    digitized and the raw endpoint that piece transmitted on the wire in.
+
+    Returns ``(labels, endpoints, n_new)`` with the arrays padded to
+    ``n_max`` (zeros beyond ``n_new``), so concatenating the first ``n_new``
+    entries of every delta reproduces ``symbols_online[:n]`` /
+    ``endpoints[:n]`` exactly.
+    """
+    n_max = symbols_online.shape[0]
+    idx = jnp.arange(n_max)
+    n_new = (state.n - prev_n).astype(jnp.int32)
+    src = jnp.minimum(prev_n + idx, n_max - 1)
+    live = idx < n_new
+    return (
+        jnp.where(live, symbols_online[src], 0).astype(jnp.int32),
+        jnp.where(live, endpoints[src], 0.0).astype(jnp.float32),
+        n_new,
+    )
 
 
 def digitize_span(

@@ -32,12 +32,17 @@ def dtw_ref(x: jax.Array, y: jax.Array, band: int | None = None) -> jax.Array:
 
     Args:
       x: (..., N), y: (..., M).
-      band: Sakoe-Chiba radius (|i-j| <= band); None = full DTW.
+      band: Sakoe-Chiba radius (|i-j| <= band); None = full DTW.  The
+        effective radius is clamped to ``max(band, |N - M|)``: any warping
+        path from (0, 0) to (N-1, M-1) must leave the diagonal by at least
+        the length difference, so a narrower band would make the terminal
+        cell unreachable and return the _INF sentinel as if it were a
+        distance.
     """
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     n, m = x.shape[-1], y.shape[-1]
-    r = band if band is not None else max(n, m)
+    r = max(band, abs(n - m)) if band is not None else max(n, m)
 
     ii = jnp.arange(n)
 

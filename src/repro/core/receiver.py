@@ -27,7 +27,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["append_tail", "compact_chunk", "compact_events", "pieces_from_wire"]
+__all__ = [
+    "DELTA_FRAME_HEADER_BYTES", "DELTA_SYMBOL_BYTES", "append_tail",
+    "compact_chunk", "compact_events", "delta_frame_bytes",
+    "pieces_from_wire",
+]
+
+# Symbol-delta frame layout (the service's outbound counterpart of the
+# 4-byte-per-piece wire *in*): a count header plus, per newly digitized
+# piece, a 1-byte symbol label and the 4-byte raw endpoint -- so downstream
+# consumers can resync the piece chain without replaying the stream.  Host
+# bookkeeping (repro.launch.stream) uses the constants directly to avoid
+# device scalars in its steady-state loop.
+DELTA_FRAME_HEADER_BYTES = 4.0
+DELTA_SYMBOL_BYTES = 5.0  # 1B label + 4B endpoint
+
+
+def delta_frame_bytes(n_new: jax.Array) -> jax.Array:
+    """Wire-out bytes of one symbol-delta frame carrying ``n_new`` symbols."""
+    return (DELTA_FRAME_HEADER_BYTES
+            + DELTA_SYMBOL_BYTES * jnp.asarray(n_new, jnp.float32))
 
 
 def compact_chunk(

@@ -36,14 +36,25 @@ def quantize_lengths(lengths: jax.Array, mask: jax.Array) -> jax.Array:
     """Round fractional lengths to ints >= 1, carrying the rounding error.
 
     ABBA's quantization: round(cumsum) - round(previous cumsum) keeps the total
-    reconstructed length equal to round(sum of fractional lengths).
+    reconstructed length equal to round(sum of fractional lengths).  The >= 1
+    floor is folded *into* the carry: a piece forced up to 1 borrows from the
+    running total, so subsequent pieces absorb the excess and the invariant
+    ``sum(q) == round(sum(lengths))`` survives sub-unit fractional lengths
+    (it degrades to ``sum(q) == n_live`` only when there are more live pieces
+    than total rounded points -- each piece must still occupy >= 1 point).
+
+    Recurrence ``alloc_i = max(alloc_{i-1} + live_i, round(csum_i))`` in
+    closed form: ``alloc_i = cnt_i + max(0, running_max(round(csum_j) -
+    cnt_j))`` with ``cnt`` the live-piece count, so it stays a parallel scan.
     """
-    lengths = jnp.where(mask, jnp.maximum(lengths, 1.0), 0.0)
-    csum = jnp.cumsum(lengths)
-    r = jnp.round(csum)
-    prev = jnp.concatenate([jnp.zeros((1,), r.dtype), r[:-1]])
-    q = (r - prev).astype(jnp.int32)
-    return jnp.where(mask, jnp.maximum(q, 1), 0)
+    lengths = jnp.where(mask, lengths, 0.0)
+    r = jnp.round(jnp.cumsum(lengths))
+    cnt = jnp.cumsum(mask.astype(r.dtype))
+    runmax = jax.lax.associative_scan(jnp.maximum, r - cnt)
+    alloc = cnt + jnp.maximum(runmax, 0.0)
+    prev = jnp.concatenate([jnp.zeros((1,), alloc.dtype), alloc[:-1]])
+    q = (alloc - prev).astype(jnp.int32)
+    return jnp.where(mask, q, 0)
 
 
 @functools.partial(jax.jit, static_argnames=("total_len",))

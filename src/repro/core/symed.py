@@ -37,23 +37,27 @@ from repro.core.compress import (
     compressor_init, compressor_step,
 )
 from repro.core.digitize import (
-    DigitizerState, digitize_pieces, digitize_span, digitizer_init,
+    DigitizerState, digitize_pieces, digitize_span, digitizer_delta,
+    digitizer_init,
 )
 from repro.core.metrics import compression_rate_symed, drr, dtw_ref
 from repro.core.receiver import (
-    append_tail, compact_chunk, compact_events, pieces_from_wire,
+    append_tail, compact_chunk, compact_events, delta_frame_bytes,
+    pieces_from_wire,
 )
 from repro.core.reconstruct import reconstruct_from_pieces, reconstruct_from_symbols
 
 __all__ = [
     "ReceiverState",
     "SymEDConfig",
+    "receiver_init",
     "symed_encode",
     "symed_encode_chunk",
     "symed_finish",
     "symed_step_chunk",
     "symed_receive_chunk",
     "symed_receive_finish",
+    "symed_receive_masked_chunk",
     "symed_batch",
     "symbols_to_string",
 ]
@@ -269,6 +273,63 @@ class ReceiverState(NamedTuple):
     chunks: jax.Array          # () i32 windows ingested so far
 
 
+def receiver_init(cfg: SymEDConfig, key: jax.Array) -> ReceiverState:
+    """Blank (unseeded) receiver slot for session tables.
+
+    ``t_seen == 0`` marks the slot as not yet opened by a stream point: the
+    first valid point of the first ``symed_receive_masked_chunk`` window
+    seeds the compressor exactly like ``symed_receive_chunk(state=None)``
+    does with ``chunk[0]``.  ``repro.launch.stream`` vmaps this over the
+    slot axis to build its resident session table.
+    """
+    return ReceiverState(
+        comp=compressor_init(jnp.zeros((), jnp.float32)),
+        dig=digitizer_init(cfg.n_max, cfg.k_max, key),
+        endpoints=jnp.zeros((cfg.n_max,), jnp.float32),
+        steps=jnp.zeros((cfg.n_max,), jnp.int32),
+        n_pieces=jnp.zeros((), jnp.int32),
+        symbols_online=jnp.zeros((cfg.n_max,), jnp.int32),
+        t0=jnp.zeros((), jnp.float32),
+        t_seen=jnp.zeros((), jnp.int32),
+        chunks=jnp.zeros((), jnp.int32),
+    )
+
+
+def _digitize_new_pieces(
+    dig, symbols_online, endpoints, steps, n_pieces, t0, *, tol, scl, n_max,
+    k_min, k_max, lloyd_iters
+):
+    """Digitize buffer slots ``[dig.n, n_pieces)``; record first-time symbols."""
+    lens, incs = pieces_from_wire(endpoints, steps, n_pieces, t0)
+    dig_new, span_syms = digitize_span(
+        dig, lens, incs, dig.n, n_pieces, tol=tol, scl=scl,
+        k_min=k_min, k_max_active=k_max, lloyd_iters=lloyd_iters,
+    )
+    idx = jnp.arange(n_max)
+    in_span = (idx >= dig.n) & (idx < n_pieces)
+    return dig_new, jnp.where(in_span, span_syms, symbols_online)
+
+
+def _symbol_delta_info(n_dig_prev, dig, symbols_online, endpoints, emitted):
+    """The per-chunk wire-out payload: what this call's digitize pass added.
+
+    ``emitted`` flags whether a delta frame goes on the wire at all (off-
+    cadence windows emit nothing); ``frame_bytes`` is the outbound traffic
+    of the frame (0 when no frame is emitted).
+    """
+    labels_d, endpoints_d, n_new = digitizer_delta(
+        n_dig_prev, dig, symbols_online, endpoints
+    )
+    emitted = jnp.asarray(emitted, bool)
+    return {
+        "labels": labels_d,
+        "endpoints": endpoints_d,
+        "n_new": n_new,
+        "emitted": emitted,
+        "frame_bytes": jnp.where(emitted, delta_frame_bytes(n_new), 0.0),
+    }
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -313,25 +374,24 @@ def _receive_chunk(
     chunks = state.chunks + 1
 
     # --- receiver: digitize the newly arrived pieces every k windows -------
+    n_dig_prev = state.dig.n
     if digitize_every_k:
         def digitize(dig, symbols_online):
-            lens, incs = pieces_from_wire(endpoints, steps, n_pieces, state.t0)
-            dig_new, span_syms = digitize_span(
-                dig, lens, incs, dig.n, n_pieces, tol=tol, scl=scl,
-                k_min=k_min, k_max_active=k_max, lloyd_iters=lloyd_iters,
+            return _digitize_new_pieces(
+                dig, symbols_online, endpoints, steps, n_pieces, state.t0,
+                tol=tol, scl=scl, n_max=n_max, k_min=k_min, k_max=k_max,
+                lloyd_iters=lloyd_iters,
             )
-            idx = jnp.arange(n_max)
-            in_span = (idx >= dig.n) & (idx < n_pieces)
-            return dig_new, jnp.where(in_span, span_syms, symbols_online)
 
         def skip(dig, symbols_online):
             return dig, symbols_online
 
+        emitted = chunks % digitize_every_k == 0
         dig, symbols_online = jax.lax.cond(
-            chunks % digitize_every_k == 0, digitize, skip,
-            state.dig, state.symbols_online,
+            emitted, digitize, skip, state.dig, state.symbols_online,
         )
     else:
+        emitted = jnp.zeros((), bool)
         dig, symbols_online = state.dig, state.symbols_online
 
     new_state = ReceiverState(
@@ -343,6 +403,9 @@ def _receive_chunk(
         "n_pieces": n_pieces,
         "n_digitized": dig.n,
         "symbols_online": symbols_online,
+        "symbol_delta": _symbol_delta_info(
+            n_dig_prev, dig, symbols_online, endpoints, emitted
+        ),
     }
     return new_state, info
 
@@ -373,6 +436,11 @@ def symed_receive_chunk(
 
     Returns ``(state, info)``: ``info["n_pieces"]`` pieces arrived so far, of
     which ``info["n_digitized"]`` have symbols in ``info["symbols_online"]``.
+    ``info["symbol_delta"]`` is the per-chunk wire-out payload -- the
+    ``(labels, endpoints, n_new)`` symbols this call's digitize pass added
+    (``emitted``/``frame_bytes`` describe the outbound frame; concatenating
+    the deltas of every call plus the finish reproduces ``symbols_online``
+    exactly -- see ``repro.launch.stream``).
 
     Single-stream semantics ((C,) windows); ``jax.vmap`` over the leading
     axis for slabs (``repro.launch.fleet`` does exactly that).
@@ -388,6 +456,138 @@ def symed_receive_chunk(
         len_max=cfg.len_max, n_max=cfg.n_max, k_min=cfg.k_min, k_max=cfg.k_max,
         lloyd_iters=cfg.lloyd_iters, digitize_every_k=int(digitize_every_k),
         first=state is None,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "len_max", "n_max", "k_min", "k_max", "lloyd_iters", "digitize_every_k",
+    ),
+)
+def _masked_receive_chunk(
+    chunk, n_valid, state, *, tol, alpha, scl, len_max, n_max, k_min, k_max,
+    lloyd_iters, digitize_every_k,
+):
+    chunk = jnp.asarray(chunk, jnp.float32)
+    c_len = chunk.shape[0]
+
+    # --- sender: scan every padded slot; only the first n_valid act --------
+    # Three runtime branches per slot (vs the static ``first`` split of
+    # ``_receive_chunk``): padding passes the carry through, the stream's
+    # very first valid point seeds the compressor (compressor_init, exactly
+    # like ``chunk[0]`` in the unmasked path), everything else runs
+    # ``compressor_step``.  Per-lane arithmetic is identical to the unmasked
+    # path, so end-of-stream outputs stay bitwise-equal.
+    def no_event():
+        return (
+            jnp.zeros((), bool), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.int32),
+        )
+
+    def step(carry, inp):
+        comp, t0, t_seen = carry
+        x, valid = inp
+
+        def skip(comp, t0, t_seen):
+            return (comp, t0, t_seen), no_event()
+
+        def seed(comp, t0, t_seen):
+            return (compressor_init(x), x, jnp.ones((), jnp.int32)), no_event()
+
+        def ingest(comp, t0, t_seen):
+            comp2, ev = compressor_step(
+                comp, x, tol=tol, len_max=len_max, alpha=alpha
+            )
+            # t_seen is the 0-based stream index of x: the receiver's
+            # arrival clock, same convention as ``step_idx`` above
+            return (comp2, t0, t_seen + 1), (ev.emit, ev.endpoint, t_seen)
+
+        branch = jnp.where(valid, jnp.where(t_seen == 0, 1, 2), 0)
+        return jax.lax.switch(branch, [skip, seed, ingest], comp, t0, t_seen)
+
+    valid = jnp.arange(c_len) < n_valid
+    (comp, t0, t_seen), (emit, chunk_endpoints, step_idx) = jax.lax.scan(
+        step, (state.comp, state.t0, state.t_seen), (chunk, valid)
+    )
+
+    # --- wire + receiver: identical to the unmasked path -------------------
+    endpoints, steps, n_pieces = compact_chunk(
+        state.endpoints, state.steps, state.n_pieces,
+        emit, chunk_endpoints, step_idx,
+    )
+    chunks = state.chunks + (n_valid > 0).astype(jnp.int32)
+
+    n_dig_prev = state.dig.n
+    if digitize_every_k:
+        def digitize(dig, symbols_online):
+            return _digitize_new_pieces(
+                dig, symbols_online, endpoints, steps, n_pieces, t0,
+                tol=tol, scl=scl, n_max=n_max, k_min=k_min, k_max=k_max,
+                lloyd_iters=lloyd_iters,
+            )
+
+        def skip_dig(dig, symbols_online):
+            return dig, symbols_online
+
+        emitted = (n_valid > 0) & (chunks % digitize_every_k == 0)
+        dig, symbols_online = jax.lax.cond(
+            emitted, digitize, skip_dig, state.dig, state.symbols_online,
+        )
+    else:
+        emitted = jnp.zeros((), bool)
+        dig, symbols_online = state.dig, state.symbols_online
+
+    new_state = ReceiverState(
+        comp=comp, dig=dig, endpoints=endpoints, steps=steps,
+        n_pieces=n_pieces, symbols_online=symbols_online,
+        t0=t0, t_seen=t_seen, chunks=chunks,
+    )
+    info = {
+        "n_pieces": n_pieces,
+        "n_digitized": dig.n,
+        "t_seen": t_seen,
+        "symbols_online": symbols_online,
+        "symbol_delta": _symbol_delta_info(
+            n_dig_prev, dig, symbols_online, endpoints, emitted
+        ),
+    }
+    return new_state, info
+
+
+def symed_receive_masked_chunk(
+    ts_chunk: jax.Array,
+    n_valid: jax.Array,
+    cfg: SymEDConfig,
+    state: ReceiverState,
+    *,
+    digitize_every_k: int = 1,
+) -> Tuple[ReceiverState, Dict[str, jax.Array]]:
+    """Session-table variant of ``symed_receive_chunk``: padded ragged ingest.
+
+    Ingests the first ``n_valid`` points of the ``(C,)`` window ``ts_chunk``
+    (a *runtime* scalar -- network arrivals are ragged) into a state that
+    must already exist (``receiver_init`` for a fresh slot; seeding happens
+    at runtime when the first valid point arrives, so fresh and resumed
+    slots batch through one program).  ``n_valid = 0`` is a no-op carrying
+    the state through unchanged -- idle slots of a session table cost one
+    masked scan, no state change.
+
+    Bitwise contract: for any padding arrangement, the resulting state
+    equals what ``symed_receive_chunk`` produces on the same valid points,
+    so end-of-stream outputs stay bitwise-equal to ``symed_encode`` /
+    ``symed_finish`` (tested in ``tests/test_stream_service.py``).
+
+    Single-slot semantics; ``jax.vmap`` over the leading axis for slot
+    tables (``repro.launch.stream`` does exactly that, under a donated jit).
+    """
+    if digitize_every_k < 0:
+        raise ValueError(f"digitize_every_k must be >= 0, got {digitize_every_k}")
+    return _masked_receive_chunk(
+        ts_chunk, jnp.asarray(n_valid, jnp.int32), state,
+        tol=cfg.tol, alpha=cfg.alpha, scl=cfg.scl, len_max=cfg.len_max,
+        n_max=cfg.n_max, k_min=cfg.k_min, k_max=cfg.k_max,
+        lloyd_iters=cfg.lloyd_iters, digitize_every_k=int(digitize_every_k),
     )
 
 
@@ -407,10 +607,13 @@ def symed_step_chunk(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_max", "k_min", "k_max", "lloyd_iters", "reconstruct"),
+    static_argnames=(
+        "n_max", "k_min", "k_max", "lloyd_iters", "reconstruct", "with_delta",
+    ),
 )
 def _receive_finish(
-    state, ts, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct
+    state, ts, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct,
+    with_delta=False,
 ):
     tail = compressor_finalize(state.comp)
     endpoints, steps, n_pieces = append_tail(
@@ -437,6 +640,12 @@ def _receive_finish(
         "cr": compression_rate_symed(n_pieces, state.t_seen),
         "drr": drr(n_pieces, state.t_seen),
     }
+    if with_delta:
+        # the closing delta frame: every piece digitized by this flush
+        out["symbol_delta"] = _symbol_delta_info(
+            state.dig.n, dig, symbols_online, endpoints,
+            jnp.ones((), bool),
+        )
     if reconstruct:
         t_len = ts.shape[-1]
         rec_p = reconstruct_from_pieces(lens, incs, n_pieces, state.t0, t_len)
@@ -455,13 +664,18 @@ def symed_receive_finish(
     cfg: SymEDConfig,
     ts: Optional[jax.Array] = None,
     reconstruct: bool = False,
+    *,
+    with_delta: bool = False,
 ) -> Dict[str, jax.Array]:
     """Close a streaming-receiver stream: flush the tail, digitize the rest.
 
     Output dict matches ``symed_encode`` / ``symed_finish`` bitwise.  ``ts``
     (the full raw stream) is only required when ``reconstruct=True`` -- unlike
     ``symed_finish``, the receiver carries everything else (``t0``, the
-    stream length ``t_seen``) in its state.
+    stream length ``t_seen``) in its state.  ``with_delta=True`` additionally
+    returns ``out["symbol_delta"]`` -- the closing wire-out frame carrying
+    the symbols this final digitize pass added (the last piece of the
+    delta-concatenation contract; see ``repro.launch.stream``).
     """
     if reconstruct and ts is None:
         raise ValueError("reconstruct=True requires the raw stream ts")
@@ -469,6 +683,7 @@ def symed_receive_finish(
     return _receive_finish(
         state, ts, tol=cfg.tol, scl=cfg.scl, n_max=cfg.n_max, k_min=cfg.k_min,
         k_max=cfg.k_max, lloyd_iters=cfg.lloyd_iters, reconstruct=reconstruct,
+        with_delta=with_delta,
     )
 
 

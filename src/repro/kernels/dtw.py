@@ -83,12 +83,16 @@ def dtw_pallas(
       band: Sakoe-Chiba radius (None = full DTW).
 
     Returns (B,) f32 distances (sqrt of accumulated squared cost), matching
-    ``repro.core.metrics.dtw_ref``.
+    ``repro.core.metrics.dtw_ref`` -- including its band clamp: the effective
+    radius is ``max(band, |N - M|)`` so the terminal cell stays reachable
+    (with the equal-length pairs this kernel takes, the clamp only guards
+    ``band < 0``, but keeping the same formula here preserves ref/Pallas
+    parity if the kernel ever grows ragged-pair support).
     """
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     b, n = x.shape
-    r = int(band) if band is not None else n
+    r = max(int(band), abs(x.shape[1] - y.shape[1])) if band is not None else n
 
     bb = min(block_b, _round_up(b, 8))
     bp = _round_up(b, bb)

@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.receiver import delta_frame_bytes
 from repro.core.symed import (
     SymEDConfig, symed_encode, symed_receive_chunk, symed_receive_finish,
 )
@@ -146,10 +147,18 @@ def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
 
 def _encode_slab(slab, keys, cfg: SymEDConfig, chunk_len, digitize_every_k,
                  reconstruct):
-    """Per-shard body: vmapped SymED over a local (b, T) sub-slab."""
+    """Per-shard body: vmapped SymED over a local (b, T) sub-slab.
+
+    Returns ``(out, wire_out)``: ``wire_out`` (b,) is the outbound
+    symbol-delta traffic each stream's receiver would put on the wire --
+    one frame per digitize pass plus the closing frame at end-of-stream
+    (``repro.launch.stream``'s emitter; whole-stream ingestion degenerates
+    to a single closing frame carrying every symbol).
+    """
     if chunk_len is None:
-        return jax.vmap(lambda t, k: symed_encode(t, cfg, k, reconstruct))(
+        out = jax.vmap(lambda t, k: symed_encode(t, cfg, k, reconstruct))(
             slab, keys)
+        return out, delta_frame_bytes(out["n_pieces"])
 
     # streaming receiver: only the current window + the O(n_max) ReceiverState
     # are live; the loop unrolls over the static window count.  The digitize
@@ -162,26 +171,33 @@ def _encode_slab(slab, keys, cfg: SymEDConfig, chunk_len, digitize_every_k,
     t_len = slab.shape[-1]
     dk = digitize_every_k or 0
     state = None
+    wire_out = jnp.zeros((slab.shape[0],), jnp.float32)
     for i, c in enumerate(range(0, t_len, chunk_len)):
         window = slab[:, c: c + chunk_len]
         dk_i = 1 if dk and (i + 1) % dk == 0 else 0
         if state is None:
-            state, _ = jax.vmap(
+            state, info = jax.vmap(
                 lambda w, k: symed_receive_chunk(w, cfg, None, k,
                                                  digitize_every_k=dk_i)
             )(window, keys)
         else:
-            state, _ = jax.vmap(
+            state, info = jax.vmap(
                 lambda w, s: symed_receive_chunk(w, cfg, s,
                                                  digitize_every_k=dk_i)
             )(window, state)
+        wire_out = wire_out + info["symbol_delta"]["frame_bytes"]
+    n_dig_before_finish = state.dig.n
     if reconstruct:
-        return jax.vmap(
+        out = jax.vmap(
             lambda s, t: symed_receive_finish(s, cfg, t, reconstruct=True)
         )(state, slab)
-    return jax.vmap(
-        lambda s: symed_receive_finish(s, cfg, None, reconstruct=False)
-    )(state)
+    else:
+        out = jax.vmap(
+            lambda s: symed_receive_finish(s, cfg, None, reconstruct=False)
+        )(state)
+    # the closing frame: whatever the final flush digitized
+    wire_out = wire_out + delta_frame_bytes(out["n_pieces"] - n_dig_before_finish)
+    return out, wire_out
 
 
 @functools.lru_cache(maxsize=32)
@@ -198,8 +214,8 @@ def _mapped_runner(mesh, axes: Tuple[str, ...], cfg: SymEDConfig, chunk_len,
         return v
 
     def shard_fn(slab, slab_keys):
-        out = _encode_slab(slab, slab_keys, cfg, chunk_len, digitize_every_k,
-                           reconstruct)
+        out, wire_out = _encode_slab(slab, slab_keys, cfg, chunk_len,
+                                     digitize_every_k, reconstruct)
         n_pts = jnp.float32(slab.shape[0] * slab.shape[1])
         tele = {
             "streams": hier_psum(jnp.float32(slab.shape[0])),
@@ -207,6 +223,7 @@ def _mapped_runner(mesh, axes: Tuple[str, ...], cfg: SymEDConfig, chunk_len,
             "pieces": hier_psum(jnp.sum(out["n_pieces"].astype(jnp.float32))),
             "wire_bytes": hier_psum(jnp.sum(out["wire_bytes"])),
             "raw_bytes": hier_psum(n_pts * 4.0),
+            "wire_out_bytes": hier_psum(jnp.sum(wire_out)),
         }
         return out, tele
 
@@ -246,7 +263,9 @@ def run_fleet(
     Returns ``(out, telemetry)``: ``out`` are the per-stream ``symed_encode``
     outputs (sharded like the input), ``telemetry`` the replicated fleet-wide
     totals reduced on-mesh: ``streams``, ``points``, ``pieces``,
-    ``wire_bytes``, ``raw_bytes``.
+    ``wire_bytes``, ``raw_bytes``, and ``wire_out_bytes`` -- the outbound
+    symbol-delta traffic (one frame per digitize pass plus the closing
+    frame, ``repro.launch.stream``'s wire format).
     """
     mesh = mesh if mesh is not None else fleet_data_mesh()
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -306,6 +325,9 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, f
         "ms_per_symbol": 1e3 * dt / max(t["pieces"], 1.0),
         "compression_rate": t["wire_bytes"] / max(t["raw_bytes"], 1.0),
         "mean_pieces_per_stream": t["pieces"] / max(t["streams"], 1.0),
+        # wire-out telemetry is absent from pre-delta callers' dicts
+        "wire_out_bytes": t.get("wire_out_bytes", 0.0),
+        "wire_out_ratio": t.get("wire_out_bytes", 0.0) / max(t["wire_bytes"], 1.0),
     }
 
 
@@ -369,6 +391,8 @@ def main():
           f"({rep['mean_pieces_per_stream']:.1f}/stream)")
     print(f"fleet raw bytes         : {int(rep['raw_bytes']):,}")
     print(f"fleet wire bytes        : {int(rep['wire_bytes']):,}")
+    print(f"fleet wire-out bytes    : {int(rep['wire_out_bytes']):,} "
+          f"(symbol-delta frames)")
     print(f"compression rate        : {rep['compression_rate']:.6f} "
           f"(paper avg 0.095)")
     if args.reconstruct:

@@ -21,11 +21,19 @@ from repro.models import init_params, prefill
 from repro.train.steps import make_serve_step
 
 
-def serve(cfg, *, batch: int, prompt_len: int, gen: int, temperature: float = 0.0,
-          seed: int = 0):
-    params = init_params(jax.random.key(seed), cfg)
-    prompts = jax.random.randint(
-        jax.random.key(seed + 1), (batch, prompt_len), 0, cfg.vocab)
+def frontend_inputs(cfg, batch: int):
+    """Stub modality inputs + the decoder-sequence prefix they prepend.
+
+    Returns ``(kw, prefix_len)``.  ``prefix_len`` is derived from the input
+    that actually gets *prepended* to the decoder sequence
+    (``prefix_embeds``; encoder memories consumed via cross-attention add
+    no decoder positions) -- the one rule ``prefill`` itself applies when it
+    computes ``s_total``.  Deriving the KV allocation from the same kw dict,
+    instead of re-matching on the frontend name, keeps the two accountings
+    from drifting: a frontend whose prefix is miscounted makes decode write
+    past the KV allocation on long generations, which XLA *clamps* (silent
+    cache corruption, no error).
+    """
     kw = {}
     if cfg.frontend == "patches":
         kw["prefix_embeds"] = jnp.zeros(
@@ -33,15 +41,33 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, temperature: float = 0.
     if cfg.frontend == "frames":
         kw["enc_frames"] = jnp.zeros(
             (batch, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+    prefix_len = sum(v.shape[1] for k, v in kw.items() if k == "prefix_embeds")
+    return kw, prefix_len
 
-    max_len = prompt_len + (cfg.num_prefix_embeds if cfg.frontend == "patches"
-                            else 0) + gen
+
+def serve(cfg, *, batch: int, prompt_len: int, gen: int, temperature: float = 0.0,
+          seed: int = 0):
+    params = init_params(jax.random.key(seed), cfg)
+    prompts = jax.random.randint(
+        jax.random.key(seed + 1), (batch, prompt_len), 0, cfg.vocab)
+    kw, prefix_len = frontend_inputs(cfg, batch)
+
+    max_len = prompt_len + prefix_len + gen
     t0 = time.perf_counter()
     logits, state = jax.jit(
         lambda p, t: prefill(p, cfg, t, max_len=max_len, **kw)
     )(params, prompts)
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
+
+    # the decode loop writes KV at positions [pos, pos + gen - 2]; if the
+    # prefix accounting above ever disagrees with prefill's s_total, fail
+    # loudly here instead of letting XLA clamp the cache writes
+    pos0 = int(state["pos"])
+    if pos0 != prompt_len + prefix_len or pos0 + gen - 1 > max_len:
+        raise AssertionError(
+            f"KV allocation mismatch: prefill starts decode at pos {pos0} "
+            f"with {gen - 1} steps but max_len={max_len}")
 
     step = jax.jit(make_serve_step(cfg, temperature=temperature),
                    donate_argnums=(1,))

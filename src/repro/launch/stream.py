@@ -1,0 +1,604 @@
+"""Resident SymED session service: the paper's deployment shape as a driver.
+
+The paper's receiver is a *long-lived* process: compressed points arrive over
+the network, symbols leave in real time (42 ms/symbol in the paper's
+single-CPU setup).  ``repro.launch.fleet`` replays pre-materialized slabs;
+this module keeps the state *resident* instead.  A ``StreamServer`` owns a
+slot table of ``max_sessions`` batched ``ReceiverState``s (one slot per live
+stream) and drives every arrival through **one donated-jit batched step**
+(``jax.vmap`` of ``symed_receive_masked_chunk``): ragged arrivals are padded
+to the ``window_cap`` with per-slot valid counts, fresh and resumed sessions
+share the same program (seeding is a runtime branch), and idle slots ride
+along as masked no-ops.  Donation means the table's device buffers are
+updated in place call after call -- the service's steady-state allocates
+nothing.
+
+Wire out: every digitize pass emits a **symbol-delta frame**
+``(new_labels, new_piece_endpoints, n_new)`` -- only what changed since the
+previous call (ABBA-VSM-style downstream consumers ingest the symbol stream
+incrementally).  The frames are self-concatenating: joining every delta of a
+session plus its closing frame reproduces ``symed_finish``'s
+``symbols_online`` / wire endpoints **bitwise** (property battery in
+``tests/test_stream_service.py``).
+
+An online DTW monitor (``dtw_every=m``) scores each session's
+piece-reconstruction against the raw points seen so far every ``m`` windows
+(``reconstruct_from_pieces`` + ``kernels.ops.dtw``), so a drifting sender is
+visible while the stream is still live.
+
+Slot lifecycle: ``open`` allocates a free slot (or, with ``evict_idle``,
+closes the least-recently-active session to make room -- its final output is
+parked in ``server.evicted``); ``close`` flushes the tail, emits the closing
+delta frame, and frees the slot for reuse.
+
+CLI (simulated-arrival driver; ``--devices N`` forces N host CPU devices and
+shards the slot table over a ``data`` mesh axis):
+
+    PYTHONPATH=src python -m repro.launch.stream --sessions 6 --max-slots 4 \
+        --length 384 --window 48 --arrival-pattern bursty --evict --verify
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":  # pragma: no cover -- CLI path only
+    # Must precede the jax import below (jax locks the device count on first
+    # init); same pre-scan dance as repro.launch.fleet.
+    _n = "1"
+    for _i, _a in enumerate(sys.argv):
+        if _a == "--devices" and _i + 1 < len(sys.argv):
+            _n = sys.argv[_i + 1]
+        elif _a.startswith("--devices="):
+            _n = _a.split("=", 1)[1]
+    if int(_n) > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.receiver import (
+    DELTA_FRAME_HEADER_BYTES, DELTA_SYMBOL_BYTES, pieces_from_wire,
+)
+from repro.core.reconstruct import reconstruct_from_pieces
+from repro.core.symed import (
+    SymEDConfig, receiver_init, symbols_to_string, symed_receive_finish,
+    symed_receive_masked_chunk,
+)
+from repro.kernels import ops
+
+__all__ = ["StreamServer", "main"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "digitize_every_k"), donate_argnums=(0,)
+)
+def _table_step(table, windows, n_valid, *, cfg, digitize_every_k):
+    """One batched service step: every slot ingests its padded window."""
+    return jax.vmap(
+        lambda s, w, n: symed_receive_masked_chunk(
+            w, n, cfg, s, digitize_every_k=digitize_every_k
+        )
+    )(table, windows, n_valid)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slot(table, slot, blank):
+    """Reset one slot of the table to a blank state (open / reopen)."""
+    return jax.tree.map(lambda l, b: l.at[slot].set(b), table, blank)
+
+
+@jax.jit
+def _read_slot(table, slot):
+    """Extract one slot's ReceiverState (for finish / monitoring)."""
+    return jax.tree.map(lambda l: l[slot], table)
+
+
+@dataclasses.dataclass
+class _Session:
+    """Host-side bookkeeping for one live slot (device state is the table)."""
+
+    stream_id: str
+    slot: int
+    chunks: int = 0           # non-empty windows ingested
+    t_seen: int = 0           # stream points ingested
+    symbols_out: int = 0      # symbols emitted across delta frames
+    frames_out: int = 0       # delta frames emitted
+    bytes_out: float = 0.0    # outbound delta-frame bytes
+    last_active: int = 0      # server clock at last arrival (LRU eviction)
+    raw: Optional[List[np.ndarray]] = None  # raw points (DTW monitor only)
+    dtw: Optional[float] = None             # latest monitor reading
+
+
+class StreamServer:
+    """Session-table SymED service: resident ``ReceiverState`` per stream.
+
+    ``open(stream_id)`` allocates a slot, ``ingest(stream_id, window)``
+    feeds a ragged arrival through the donated batched step and returns the
+    symbol-delta frame it produced, ``close(stream_id)`` flushes the stream
+    and frees the slot.  All sessions advance together: ``ingest_many``
+    batches concurrent arrivals into a single device program.
+
+    Args:
+      cfg: SymED hyperparameters (shared by every session).
+      max_sessions: slot-table capacity (static; the batched step's shape).
+      window_cap: padded arrival width.  Longer arrivals are split into
+        ``window_cap``-sized rounds host-side; shorter ones are padded and
+        masked, so any arrival size works without retracing.
+      digitize_every_k: digitize cadence in non-empty windows per session
+        (``symed_receive_chunk`` semantics; 0 defers symbols to ``close``).
+      dtw_every: every this-many windows per session, reconstruct from the
+        accumulated pieces and score DTW against the raw points seen so far
+        (0 disables; enabling keeps each session's raw history on the host).
+      dtw_band: Sakoe-Chiba radius for the monitor (None = full DTW).
+      evict_idle: when the table is full, ``open`` evicts the least-recently
+        active session (final output parked in ``server.evicted``) instead
+        of raising.
+      seed: base PRNG seed for per-session digitizer keys.
+      mesh: optional 1-D ``(data,)`` mesh; the slot table shards over it
+        (``max_sessions`` must divide over the mesh devices).
+    """
+
+    def __init__(
+        self,
+        cfg: SymEDConfig,
+        *,
+        max_sessions: int = 8,
+        window_cap: int = 64,
+        digitize_every_k: int = 1,
+        dtw_every: int = 0,
+        dtw_band: Optional[int] = None,
+        evict_idle: bool = False,
+        seed: int = 0,
+        mesh=None,
+    ):
+        if max_sessions < 1:
+            raise ValueError(f"max_sessions must be >= 1, got {max_sessions}")
+        if window_cap < 1:
+            raise ValueError(f"window_cap must be >= 1, got {window_cap}")
+        if digitize_every_k < 0:
+            raise ValueError(
+                f"digitize_every_k must be >= 0, got {digitize_every_k}")
+        if dtw_every < 0:
+            raise ValueError(f"dtw_every must be >= 0, got {dtw_every}")
+        if mesh is not None and max_sessions % mesh.devices.size:
+            raise ValueError(
+                f"max_sessions={max_sessions} must divide over the "
+                f"{mesh.devices.size}-device mesh")
+        self.cfg = cfg
+        self.max_sessions = int(max_sessions)
+        self.window_cap = int(window_cap)
+        self.digitize_every_k = int(digitize_every_k)
+        self.dtw_every = int(dtw_every)
+        self.dtw_band = dtw_band
+        self.evict_idle = bool(evict_idle)
+        self._mesh = mesh
+        self._base_key = jax.random.key(seed)
+        self._serial = 0            # sessions ever opened (key derivation)
+        self._clock = 0             # ingest rounds (LRU ordering)
+        self._sessions: Dict[str, _Session] = {}
+        self._free = list(range(self.max_sessions))
+        self.evicted: Dict[str, dict] = {}
+        # fleet-wide wire accounting (the service's fleet_report counterpart)
+        self.totals = {
+            "points_in": 0, "bytes_in": 0.0, "symbols_out": 0,
+            "frames_out": 0, "bytes_out": 0.0, "steps": 0,
+            "opened": 0, "closed": 0, "evicted": 0,
+        }
+        blanks = jax.vmap(lambda k: receiver_init(cfg, k))(
+            jax.random.split(self._base_key, self.max_sessions))
+        if mesh is not None:
+            blanks = jax.device_put(blanks, NamedSharding(mesh, P("data")))
+        self._table = blanks
+
+    # ------------------------------------------------------------------ API
+
+    @property
+    def active_sessions(self) -> int:
+        return len(self._sessions)
+
+    def __contains__(self, stream_id: str) -> bool:
+        return stream_id in self._sessions
+
+    def session_stats(self, stream_id: str) -> dict:
+        """Live bookkeeping for one open session (monitoring surface)."""
+        sess = self._sessions[stream_id]
+        return {
+            "slot": sess.slot, "chunks": sess.chunks, "t_seen": sess.t_seen,
+            "symbols_out": sess.symbols_out, "frames_out": sess.frames_out,
+            "bytes_out": sess.bytes_out, "dtw": sess.dtw,
+        }
+
+    def open(self, stream_id: str, key: Optional[jax.Array] = None) -> int:
+        """Allocate a slot for ``stream_id``; returns the slot index.
+
+        ``key`` seeds the session's digitizer (default: derived from the
+        server seed and the session serial, so every session is independent
+        and reproducible).
+        """
+        if stream_id in self._sessions:
+            raise ValueError(f"session {stream_id!r} is already open")
+        if not self._free:
+            if not self.evict_idle:
+                raise RuntimeError(
+                    f"session table full ({self.max_sessions} slots); "
+                    "close a session or construct with evict_idle=True")
+            lru = min(self._sessions.values(), key=lambda s: s.last_active)
+            self.evicted[lru.stream_id] = self.close(lru.stream_id)
+            self.totals["evicted"] += 1
+            self.totals["closed"] -= 1  # eviction is not a clean close
+        slot = self._free.pop()
+        self._serial += 1
+        if key is None:
+            key = jax.random.fold_in(self._base_key, self._serial)
+        self._table = _write_slot(
+            self._table, jnp.asarray(slot, jnp.int32),
+            receiver_init(self.cfg, key))
+        self._sessions[stream_id] = _Session(
+            stream_id=stream_id, slot=slot, last_active=self._clock,
+            raw=[] if self.dtw_every else None,
+        )
+        self.totals["opened"] += 1
+        self.totals["bytes_in"] += 4.0  # the t0 "hello" payload
+        return slot
+
+    def ingest(self, stream_id: str, window) -> dict:
+        """Feed one ragged arrival; returns its symbol-delta frame."""
+        return self.ingest_many({stream_id: window})[stream_id]
+
+    def ingest_many(self, arrivals: Dict[str, object]) -> Dict[str, dict]:
+        """Feed concurrent arrivals through one batched step per round.
+
+        ``arrivals`` maps open stream ids to 1-D float windows of any
+        length; windows longer than ``window_cap`` are split into
+        consecutive rounds so every session advances in lockstep.  Returns
+        the merged symbol-delta frame per stream:
+        ``{"labels", "endpoints", "n_new", "frames", "bytes"}``.
+        """
+        wins = {}
+        for sid, w in arrivals.items():
+            if sid not in self._sessions:
+                raise KeyError(f"unknown session {sid!r} (open it first)")
+            w = np.asarray(w, np.float32).reshape(-1)
+            wins[sid] = w
+        deltas = {
+            sid: {"labels": [], "endpoints": [], "n_new": 0, "frames": 0,
+                  "bytes": 0.0}
+            for sid in wins
+        }
+        rounds = max(
+            (len(w) + self.window_cap - 1) // self.window_cap
+            for w in wins.values()
+        ) if wins else 0
+        for r in range(rounds):
+            padded = np.zeros((self.max_sessions, self.window_cap), np.float32)
+            n_valid = np.zeros((self.max_sessions,), np.int32)
+            active = []
+            for sid, w in wins.items():
+                part = w[r * self.window_cap: (r + 1) * self.window_cap]
+                if not len(part):
+                    continue
+                sess = self._sessions[sid]
+                padded[sess.slot, : len(part)] = part
+                n_valid[sess.slot] = len(part)
+                active.append((sid, part))
+            if not active:
+                continue
+            windows = jnp.asarray(padded)
+            counts = jnp.asarray(n_valid)
+            if self._mesh is not None:
+                sharding = NamedSharding(self._mesh, P("data"))
+                windows = jax.device_put(windows, sharding)
+                counts = jax.device_put(counts, sharding)
+            self._table, info = _table_step(
+                self._table, windows, counts,
+                cfg=self.cfg, digitize_every_k=self.digitize_every_k)
+            self.totals["steps"] += 1
+            self._clock += 1
+            d = info["symbol_delta"]
+            labels = np.asarray(d["labels"])
+            endpoints = np.asarray(d["endpoints"])
+            n_new = np.asarray(d["n_new"])
+            emitted = np.asarray(d["emitted"])
+            t_seen = np.asarray(info["t_seen"])
+            for sid, part in active:
+                sess = self._sessions[sid]
+                n = int(n_new[sess.slot])
+                out = deltas[sid]
+                out["labels"].append(labels[sess.slot, :n])
+                out["endpoints"].append(endpoints[sess.slot, :n])
+                out["n_new"] += n
+                sess.chunks += 1
+                sess.t_seen = int(t_seen[sess.slot])
+                sess.last_active = self._clock
+                sess.symbols_out += n
+                self.totals["points_in"] += len(part)
+                self.totals["bytes_in"] += 4.0 * len(part)
+                self.totals["symbols_out"] += n
+                if bool(emitted[sess.slot]):
+                    frame = DELTA_FRAME_HEADER_BYTES + DELTA_SYMBOL_BYTES * n
+                    sess.frames_out += 1
+                    sess.bytes_out += frame
+                    out["frames"] += 1
+                    out["bytes"] += frame
+                    self.totals["frames_out"] += 1
+                    self.totals["bytes_out"] += frame
+                if sess.raw is not None:
+                    sess.raw.append(part)
+                if (self.dtw_every and sess.raw is not None
+                        and sess.chunks % self.dtw_every == 0):
+                    sess.dtw = self._monitor_dtw(sess)
+        for out in deltas.values():
+            out["labels"] = (np.concatenate(out["labels"])
+                             if out["labels"] else np.zeros((0,), np.int32))
+            out["endpoints"] = (np.concatenate(out["endpoints"])
+                                if out["endpoints"] else np.zeros((0,), np.float32))
+        return deltas
+
+    def close(self, stream_id: str) -> dict:
+        """Flush the tail, emit the closing delta frame, free the slot.
+
+        Returns ``{"out", "delta", "symbols", "n_pieces", "t_seen", "dtw"}``
+        where ``out`` is the full ``symed_receive_finish`` dict (bitwise
+        equal to ``symed_encode`` on the points this session ingested).
+        """
+        sess = self._sessions.pop(stream_id, None)
+        if sess is None:
+            raise KeyError(f"unknown session {stream_id!r}")
+        delta = {"labels": np.zeros((0,), np.int32),
+                 "endpoints": np.zeros((0,), np.float32),
+                 "n_new": 0, "frames": 0, "bytes": 0.0}
+        out = None
+        n_pieces = 0
+        if sess.t_seen:  # a never-fed session has nothing to flush
+            sub = _read_slot(self._table, jnp.asarray(sess.slot, jnp.int32))
+            out = symed_receive_finish(sub, self.cfg, with_delta=True)
+            d = out["symbol_delta"]
+            n = int(d["n_new"])
+            frame = DELTA_FRAME_HEADER_BYTES + DELTA_SYMBOL_BYTES * n
+            delta = {"labels": np.asarray(d["labels"])[:n],
+                     "endpoints": np.asarray(d["endpoints"])[:n],
+                     "n_new": n, "frames": 1, "bytes": frame}
+            n_pieces = int(out["n_pieces"])
+            sess.symbols_out += n
+            sess.frames_out += 1
+            sess.bytes_out += frame
+            self.totals["symbols_out"] += n
+            self.totals["frames_out"] += 1
+            self.totals["bytes_out"] += frame
+        self._free.append(sess.slot)
+        self.totals["closed"] += 1
+        return {
+            "stream_id": stream_id,
+            "out": out,
+            "delta": delta,
+            "symbols": (symbols_to_string(out["symbols_online"], n_pieces)
+                        if out is not None else ""),
+            "n_pieces": n_pieces,
+            "t_seen": sess.t_seen,
+            "symbols_out": sess.symbols_out,
+            "bytes_out": sess.bytes_out,
+            "dtw": sess.dtw,
+        }
+
+    def report(self, wall_seconds: float) -> Dict[str, float]:
+        """Host-side service summary (the fleet_report counterpart)."""
+        t = {k: float(v) for k, v in self.totals.items()}
+        dt = max(wall_seconds, 1e-9)
+        return {
+            **t,
+            "active": float(self.active_sessions),
+            "wall_seconds": wall_seconds,
+            "points_per_s": t["points_in"] / dt,
+            "symbols_per_s": t["symbols_out"] / dt,
+            "ms_per_symbol": 1e3 * dt / max(t["symbols_out"], 1.0),
+            "wire_out_ratio": t["bytes_out"] / max(t["bytes_in"], 1.0),
+        }
+
+    # ------------------------------------------------------------- internals
+
+    def _monitor_dtw(self, sess: _Session) -> float:
+        """Online reconstruction error: DTW(raw so far, pieces so far).
+
+        Jit-compiles per distinct stream length (the reconstruction's output
+        shape); the simulated driver keeps lengths small, a production
+        monitor would bucket them.
+        """
+        raw = np.concatenate(sess.raw)
+        sub = _read_slot(self._table, jnp.asarray(sess.slot, jnp.int32))
+        lens, incs = pieces_from_wire(
+            sub.endpoints, sub.steps, sub.n_pieces, sub.t0)
+        rec = reconstruct_from_pieces(
+            lens, incs, sub.n_pieces, sub.t0, raw.shape[0])
+        d = ops.dtw(raw[None], np.asarray(rec)[None], band=self.dtw_band,
+                    force_ref=ops.on_cpu())
+        return float(d[0])
+
+
+# ----------------------------------------------------------------- CLI
+
+
+def _arrival_schedule(pattern: str, n_sessions: int, n_windows: int, rng):
+    """Yield per-tick lists of (session index, window index) arrivals."""
+    cursors = [0] * n_sessions
+    if pattern == "roundrobin":
+        while any(c < n_windows for c in cursors):
+            tick = [(s, cursors[s]) for s in range(n_sessions)
+                    if cursors[s] < n_windows]
+            for s, _ in tick:
+                cursors[s] += 1
+            yield tick
+    elif pattern == "random":
+        while any(c < n_windows for c in cursors):
+            live = [s for s in range(n_sessions) if cursors[s] < n_windows]
+            pick = [s for s in live if rng.random() < 0.6] or live[:1]
+            tick = [(s, cursors[s]) for s in pick]
+            for s, _ in tick:
+                cursors[s] += 1
+            yield tick
+    elif pattern == "bursty":
+        s = 0
+        while any(c < n_windows for c in cursors):
+            live = [i for i in range(n_sessions) if cursors[i] < n_windows]
+            s = live[s % len(live)]
+            burst = min(int(rng.integers(1, 4)), n_windows - cursors[s])
+            for _ in range(burst):
+                yield [(s, cursors[s])]
+                cursors[s] += 1
+            s += 1
+    else:  # pragma: no cover -- argparse choices guard this
+        raise ValueError(pattern)
+
+
+def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
+    """Fail fast (exit 2) before any jax work, like the fleet CLI."""
+    if args.sessions < 1:
+        ap.error(f"--sessions must be >= 1, got {args.sessions}")
+    if args.max_slots < 1:
+        ap.error(f"--max-slots must be >= 1, got {args.max_slots}")
+    if args.length < 2:
+        ap.error(f"--length must be >= 2, got {args.length}")
+    if args.window < 1:
+        ap.error(f"--window must be >= 1, got {args.window}")
+    if args.window > args.length:
+        ap.error(f"--window {args.window} exceeds --length {args.length}")
+    if args.digitize_every < 0:
+        ap.error(f"--digitize-every must be >= 0, got {args.digitize_every}")
+    if args.dtw_every < 0:
+        ap.error(f"--dtw-every must be >= 0, got {args.dtw_every}")
+    if args.tol <= 0:
+        ap.error(f"--tol must be > 0, got {args.tol}")
+    if args.sessions > args.max_slots and not args.evict:
+        ap.error(f"--sessions {args.sessions} exceeds --max-slots "
+                 f"{args.max_slots}; pass --evict to allow LRU eviction")
+    if args.devices < 1:
+        ap.error(f"--devices must be >= 1, got {args.devices}")
+    if args.max_slots % args.devices:
+        ap.error(f"--max-slots {args.max_slots} must divide over "
+                 f"--devices {args.devices}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--sessions", type=int, default=6,
+                    help="simulated streams arriving at the service")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="resident slot-table capacity")
+    ap.add_argument("--length", type=int, default=384)
+    ap.add_argument("--window", type=int, default=48,
+                    help="arrival window cap (ragged arrivals are padded)")
+    ap.add_argument("--arrival-pattern", default="roundrobin",
+                    choices=("roundrobin", "random", "bursty"))
+    ap.add_argument("--digitize-every", type=int, default=1)
+    ap.add_argument("--dtw-every", type=int, default=0,
+                    help="online DTW monitor cadence in windows (0: off)")
+    ap.add_argument("--evict", action="store_true",
+                    help="LRU-evict when sessions exceed slots")
+    ap.add_argument("--verify", action="store_true",
+                    help="check delta concatenation against symed_encode")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="forced host device count; >1 shards the slot table")
+    ap.add_argument("--tol", type=float, default=0.5)
+    ap.add_argument("--alpha", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    validate_cli_args(ap, args)
+
+    from repro.data.synthetic import make_fleet
+    from repro.launch.fleet import fleet_data_mesh
+
+    cfg = SymEDConfig(tol=args.tol, alpha=args.alpha, n_max=256, k_max=32,
+                      len_max=256)
+    mesh = fleet_data_mesh() if args.devices > 1 else None
+    server = StreamServer(
+        cfg, max_sessions=args.max_slots, window_cap=args.window,
+        digitize_every_k=args.digitize_every, dtw_every=args.dtw_every,
+        evict_idle=args.evict, seed=args.seed, mesh=mesh,
+    )
+    data = np.asarray(make_fleet(args.sessions, args.length, seed=args.seed))
+    keys = jax.random.split(jax.random.key(args.seed), args.sessions)
+    n_windows = -(-args.length // args.window)
+    rng = np.random.default_rng(args.seed)
+
+    sids = [f"stream-{i}" for i in range(args.sessions)]
+    deltas: Dict[str, list] = {sid: [] for sid in sids}
+    closed: Dict[str, dict] = {}
+
+    t0 = time.time()
+    for tick in _arrival_schedule(
+            args.arrival_pattern, args.sessions, n_windows, rng):
+        batch = {}
+        for s, w in tick:
+            sid = sids[s]
+            if sid in closed or sid in server.evicted:
+                continue  # stream terminated (eviction drops the remainder)
+            if sid not in server:
+                server.open(sid, key=keys[s])
+            batch[sid] = data[s, w * args.window: (w + 1) * args.window]
+        # opening a session may LRU-evict one queued earlier this same tick
+        batch = {sid: w for sid, w in batch.items() if sid in server}
+        if not batch:
+            continue
+        for sid, d in server.ingest_many(batch).items():
+            deltas[sid].append(d)
+        for sid in list(batch):
+            if sid in server and server.session_stats(sid)["t_seen"] >= args.length:
+                closed[sid] = server.close(sid)
+    wall = time.time() - t0
+    closed.update(server.evicted)
+
+    rep = server.report(wall)
+    print(f"devices / table shards  : {args.devices}")
+    print(f"slot table              : {args.max_slots} slots, "
+          f"window cap {args.window}, pattern {args.arrival_pattern}")
+    print(f"sessions                : {int(rep['opened'])} opened, "
+          f"{int(rep['closed'])} closed, {int(rep['evicted'])} evicted")
+    print(f"wall time               : {rep['wall_seconds']:.2f}s "
+          f"({int(rep['steps'])} batched steps)")
+    print(f"points in               : {int(rep['points_in'])} "
+          f"({int(rep['bytes_in'])} wire-in bytes)")
+    print(f"symbols out             : {int(rep['symbols_out'])} in "
+          f"{int(rep['frames_out'])} delta frames "
+          f"({int(rep['bytes_out'])} wire-out bytes)")
+    print(f"symbol latency          : {rep['ms_per_symbol']:.3f} ms/symbol "
+          f"(paper: 42ms single-CPU)")
+    if args.dtw_every:
+        vals = [r["dtw"] for r in closed.values() if r["dtw"] is not None]
+        if vals:
+            print(f"online DTW monitor      : mean {np.mean(vals):.3f} "
+                  f"over {len(vals)} sessions")
+
+    if args.verify:
+        from repro.core.symed import symed_encode
+
+        checked = 0
+        for i, sid in enumerate(sids):
+            if sid not in closed:
+                continue
+            res = closed[sid]
+            got = np.concatenate(
+                [d["labels"] for d in deltas[sid]] + [res["delta"]["labels"]])
+            t_seen = res["t_seen"]
+            if not t_seen:
+                continue
+            ref = symed_encode(
+                jnp.asarray(data[i, :t_seen]), cfg, keys[i], reconstruct=False)
+            want = np.asarray(ref["symbols_online"])[: int(ref["n_pieces"])]
+            np.testing.assert_array_equal(got, want)
+            checked += 1
+        print(f"delta equivalence       : OK ({checked} sessions bitwise)")
+
+
+if __name__ == "__main__":
+    main()

@@ -109,6 +109,43 @@ class TestReconstruction:
         # ABBA cumulative rounding: total drifts < 1 from the real sum
         assert abs(q.sum() - float(np.asarray(arr).sum())) <= len(lens) * 0.5 + 1
 
+    @given(st.lists(st.floats(0.05, 4.0), min_size=3, max_size=48),
+           st.integers(0, 5))
+    @settings(max_examples=30, deadline=None)
+    def test_quantize_lengths_subunit_exact_invariant(self, lens, pad):
+        """Regression: pieces that round to 0 used to be floored to 1 *after*
+        the carry, silently inflating the total.  With the floor folded into
+        the carry, the total equals the tight lower bound
+        ``max_j(round(csum_j) + n - j)`` -- the smallest total any >=1-point
+        allocation can reach once ``j`` pieces consumed ``round(csum_j)``
+        points -- which *is* ``round(sum(lengths))`` whenever the floors can
+        be absorbed (the bound is attained at ``j = n``).  Mask padding must
+        contribute nothing."""
+        n = len(lens)
+        arr = jnp.asarray(list(lens) + [50.0] * pad, jnp.float32)
+        mask = jnp.asarray([True] * n + [False] * pad)
+        q = np.asarray(quantize_lengths(arr, mask))
+        assert (q[:n] >= 1).all()
+        assert (q[n:] == 0).all()
+        r = np.asarray(jnp.round(jnp.cumsum(jnp.asarray(lens, jnp.float32))))
+        bound = max(r[j] + (n - 1 - j) for j in range(n))
+        assert q.sum() == max(bound, n)
+        if bound == r[-1] >= n:  # floors absorbed: the ABBA invariant, exact
+            assert q.sum() == r[-1]
+
+    def test_quantize_lengths_subunit_carry_absorbs_floor(self):
+        """Many sub-unit fractional lengths: forced >=1 floors borrow from
+        the carry, so later pieces absorb the excess and the exact total
+        round(0.4 + 2.6 + 0.4 + 2.6) = 6 survives (the old post-carry floor
+        returned 7)."""
+        arr = jnp.asarray([0.4, 2.6, 0.4, 2.6], jnp.float32)
+        q = np.asarray(quantize_lengths(arr, jnp.ones((4,), bool)))
+        assert q.tolist() == [1, 2, 1, 2]
+        # degenerate: more live pieces than rounded points -> one point each
+        arr = jnp.asarray([0.1] * 10, jnp.float32)
+        q = np.asarray(quantize_lengths(arr, jnp.ones((10,), bool)))
+        assert q.tolist() == [1] * 10
+
 
 class TestMetrics:
     def test_dtw_identity_and_symmetry(self, rng):
@@ -122,6 +159,31 @@ class TestMetrics:
         y = x + jnp.asarray(np.random.default_rng(1).normal(0, 0.1, 100), jnp.float32)
         eu = float(jnp.sqrt(jnp.sum((x - y) ** 2)))
         assert float(dtw_ref(x, y)) <= eu + 1e-4
+
+    @pytest.mark.parametrize("band", [0, 1, 3])
+    def test_dtw_band_clamped_to_length_gap(self, rng, band):
+        """Regression: band < |n - m| used to make the terminal cell
+        unreachable, returning sqrt(1e30) as if it were a distance.  The
+        effective radius clamps to max(band, |n-m|), so the distance stays
+        finite and can only tighten (grow) versus full DTW."""
+        x = jnp.asarray(make_stream(rng, 90))
+        y = jnp.asarray(make_stream(np.random.default_rng(3), 50))
+        d = float(dtw_ref(x, y, band=band))
+        full = float(dtw_ref(x, y))
+        assert d < 1e10, "terminal cell unreachable: _INF leaked out"
+        assert d >= full - 1e-4
+        # band == |n-m| is the tightest reachable corridor; smaller bands
+        # clamp to it exactly
+        assert d == pytest.approx(float(dtw_ref(x, y, band=40)), rel=1e-6)
+
+    def test_dtw_band_zero_equal_lengths_is_euclidean(self, rng):
+        """band=0 with equal lengths pins the diagonal path: DTW degenerates
+        to the pointwise L2 distance (no clamp interference)."""
+        x = jnp.asarray(make_stream(rng, 64))
+        y = x + jnp.asarray(
+            np.random.default_rng(4).normal(0, 0.2, 64), jnp.float32)
+        eu = float(jnp.sqrt(jnp.sum((x - y) ** 2)))
+        assert float(dtw_ref(x, y, band=0)) == pytest.approx(eu, rel=1e-5)
 
     def test_cr_formulas(self):
         # CR_SymED = n/N (one float per piece vs float per point)

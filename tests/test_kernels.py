@@ -110,6 +110,20 @@ class TestDtwKernel:
         x = jnp.asarray(RNG.normal(size=(3, 90)), jnp.float32)
         np.testing.assert_allclose(ops.dtw(x, x), 0.0, atol=1e-4)
 
+    def test_band_zero_matches_ref(self):
+        """Regression: the degenerate band=0 corridor (diagonal-only path)
+        must agree between kernel and ref -- and stay finite, not leak the
+        _BIG unreachable-cell sentinel."""
+        x = jnp.asarray(RNG.normal(size=(3, 96)).cumsum(1), jnp.float32)
+        y = x + jnp.asarray(RNG.normal(0, 0.2, (3, 96)), jnp.float32)
+        d1 = np.asarray(ops.dtw(x, y, band=0))
+        d2 = np.asarray(ref.dtw_batch_ref(x, y, band=0))
+        assert (d1 < 1e10).all()
+        np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+        # band=0 == pointwise L2 on equal-length pairs
+        eu = np.sqrt(np.sum((np.asarray(x) - np.asarray(y)) ** 2, axis=1))
+        np.testing.assert_allclose(d1, eu, rtol=1e-4)
+
     def test_band_tightens_distance(self):
         """Narrower band restricts warping -> distance monotone non-decreasing."""
         x = jnp.asarray(RNG.normal(size=(2, 100)).cumsum(1), jnp.float32)

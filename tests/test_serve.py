@@ -1,0 +1,45 @@
+"""Serving-driver smoke tests: unified prefix accounting for the KV cache.
+
+``launch.serve`` allocates the decode KV cache (``max_len``) from the same
+rule ``prefill`` uses for ``s_total`` -- the prefix length is derived from
+the frontend input that actually gets prepended to the decoder sequence,
+not from string-matching the frontend name.  A miscount doesn't crash: XLA
+*clamps* the out-of-range cache writes, silently corrupting the last slot.
+These tests pin the accounting for every frontend shape (none / patches /
+frames) and run the reduced serve loop end-to-end with a generation longer
+than the prompt (the regime where an undercounted ``max_len`` overruns).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import frontend_inputs, serve
+
+
+@pytest.mark.parametrize("arch,expect_prefix", [
+    ("olmoe-1b-7b", 0),       # frontend "none"
+    ("paligemma-3b", 8),      # "patches": prefix_embeds prepend to the decoder
+    ("whisper-small", 0),     # "frames": cross-attended memory, no prepend
+])
+def test_prefix_accounting_matches_prefill(arch, expect_prefix):
+    """frontend_inputs' prefix length equals what prefill adds to s_total."""
+    cfg = get_config(arch).reduced()
+    kw, prefix_len = frontend_inputs(cfg, batch=2)
+    assert prefix_len == expect_prefix
+    want = kw["prefix_embeds"].shape[1] if "prefix_embeds" in kw else 0
+    assert prefix_len == want
+
+
+@pytest.mark.parametrize("arch", ["whisper-small", "paligemma-3b"])
+def test_serve_long_generation_smoke(arch):
+    """Reduced-config serve with gen > prompt_len: the decode loop must stay
+    inside the KV allocation (serve asserts pos + steps <= max_len) and
+    produce the requested token grid."""
+    cfg = get_config(arch).reduced()
+    tokens, stats = serve(cfg, batch=2, prompt_len=6, gen=10)
+    assert tokens.shape == (2, 10)
+    toks = np.asarray(tokens)
+    assert ((toks >= 0) & (toks < cfg.vocab)).all()
+    for v in stats.values():
+        assert np.isfinite(v)

@@ -1,0 +1,243 @@
+"""Delta-stream equivalence battery for the resident session service.
+
+The ``repro.launch.stream`` contract: a session's concatenated per-chunk
+symbol deltas (every ``ingest`` frame plus the closing frame from ``close``)
+must be **bitwise** equal to what the one-shot ``symed_encode`` /
+``symed_finish`` paths produce on the same points -- for every stream
+length, ragged window split, digitize cadence, and session open/close
+ordering, with other sessions churning through the same slot table.  Ragged
+splits are runtime values (the masked step never retraces), so the
+properties vary them freely; table shapes and cadences come from small
+palettes to bound compiles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import make_stream
+
+from repro.core.compress import compress_stream
+from repro.core.symed import SymEDConfig, symed_encode
+from repro.launch.stream import StreamServer
+
+CFG = SymEDConfig(tol=0.5, alpha=0.02, scl=1.0, k_min=3, k_max=8,
+                  len_max=32, n_max=64, lloyd_iters=5)
+T_LENS = (96, 128, 160)   # palettes bound the number of distinct jit traces
+WINDOW_CAP = 32
+
+
+def feed_session(server, sid, ts, key, rng, lo=1, hi=49):
+    """Open ``sid``, deliver ``ts`` in ragged arrivals, close; return the
+    closing result plus every delta frame in arrival order."""
+    server.open(sid, key=key)
+    deltas, pos = [], 0
+    while pos < len(ts):
+        n = int(rng.integers(lo, hi))
+        deltas.append(server.ingest(sid, ts[pos: pos + n]))
+        pos += n
+    return server.close(sid), deltas
+
+
+def concat_delta(deltas, closing):
+    labels = np.concatenate(
+        [d["labels"] for d in deltas] + [closing["delta"]["labels"]])
+    endpoints = np.concatenate(
+        [d["endpoints"] for d in deltas] + [closing["delta"]["endpoints"]])
+    return labels, endpoints
+
+
+def wire_endpoints_ref(ts):
+    """Ground-truth transmitted endpoints straight from the sender."""
+    ev = compress_stream(jnp.asarray(ts), tol=CFG.tol, len_max=CFG.len_max,
+                         alpha=CFG.alpha)
+    eps = list(np.asarray(ev["endpoint"])[np.asarray(ev["emit"])])
+    if bool(ev["tail"].emit):
+        eps.append(float(ev["tail"].endpoint))
+    return np.asarray(eps, np.float32)
+
+
+def assert_session_matches_encode(res, deltas, ts, key, context=""):
+    whole = symed_encode(jnp.asarray(ts), CFG, key, reconstruct=False)
+    n = int(whole["n_pieces"])
+    labels, endpoints = concat_delta(deltas, res)
+    np.testing.assert_array_equal(
+        labels, np.asarray(whole["symbols_online"])[:n],
+        err_msg=f"{context}: delta labels")
+    np.testing.assert_array_equal(
+        endpoints, wire_endpoints_ref(ts),
+        err_msg=f"{context}: delta endpoints")
+    for name in whole:
+        np.testing.assert_array_equal(
+            np.asarray(res["out"][name]), np.asarray(whole[name]),
+            err_msg=f"{context}: {name}")
+
+
+class TestDeltaEquivalence:
+    @given(st.sampled_from(T_LENS), st.integers(1, 3), st.integers(0, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_concat_bitwise_equals_encode(self, t_len, cadence, seed):
+        """Random lengths x ragged splits x cadences: concatenated deltas and
+        the closing output are bitwise-equal to one-shot symed_encode."""
+        rng = np.random.default_rng(3000 + 31 * t_len + 7 * cadence + seed)
+        ts = make_stream(rng, t_len)
+        key = jax.random.key(seed)
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              digitize_every_k=cadence)
+        res, deltas = feed_session(server, "s", ts, key, rng)
+        assert_session_matches_encode(
+            res, deltas, ts, key, f"T={t_len} k={cadence} seed={seed}")
+
+    @given(st.integers(0, 3))
+    @settings(max_examples=8, deadline=None)
+    def test_interleaved_sessions_bitwise(self, seed):
+        """Concurrent sessions advancing through one slot table in random
+        interleavings, closed in random order: each stream's deltas equal
+        its own single-stream reference."""
+        rng = np.random.default_rng(4000 + seed)
+        n_sess = 3
+        streams = [make_stream(rng, 128) for _ in range(n_sess)]
+        keys = [jax.random.key(100 + seed * 10 + i) for i in range(n_sess)]
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              digitize_every_k=1)
+        deltas = {i: [] for i in range(n_sess)}
+        cursors = [0] * n_sess
+        for i in range(n_sess):
+            server.open(f"s{i}", key=keys[i])
+        while any(c < 128 for c in cursors):
+            live = [i for i in range(n_sess) if cursors[i] < 128]
+            pick = [i for i in live if rng.random() < 0.7] or live[:1]
+            batch = {}
+            for i in pick:
+                n = int(rng.integers(1, 40))
+                batch[f"s{i}"] = streams[i][cursors[i]: cursors[i] + n]
+                cursors[i] = min(cursors[i] + n, 128)
+            for sid, d in server.ingest_many(batch).items():
+                deltas[int(sid[1:])].append(d)
+        for i in rng.permutation(n_sess):
+            res = server.close(f"s{i}")
+            assert_session_matches_encode(
+                res, deltas[i], streams[i], keys[i],
+                f"seed={seed} session={i}")
+
+    def test_slot_reuse_after_close(self, rng):
+        """Open/close orderings that recycle slots: a slot freed mid-run and
+        reopened by a new stream must not leak state across sessions."""
+        server = StreamServer(CFG, max_sessions=2, window_cap=WINDOW_CAP,
+                              digitize_every_k=2)
+        results = {}
+        for round_ in range(3):  # 6 sessions through 2 slots
+            for j in range(2):
+                sid = f"r{round_}j{j}"
+                ts = make_stream(rng, 96)
+                key = jax.random.key(7 * round_ + j)
+                res, deltas = feed_session(server, sid, ts, key, rng)
+                results[sid] = (res, deltas, ts, key)
+        assert server.active_sessions == 0
+        for sid, (res, deltas, ts, key) in results.items():
+            assert_session_matches_encode(res, deltas, ts, key, sid)
+
+    def test_eviction_equals_prefix_encode(self, rng):
+        """LRU eviction closes the victim early: its parked output must be
+        bitwise-equal to symed_encode over the points it actually got."""
+        server = StreamServer(CFG, max_sessions=2, window_cap=WINDOW_CAP,
+                              digitize_every_k=1, evict_idle=True)
+        streams = {f"s{i}": make_stream(rng, 96) for i in range(3)}
+        keys = {f"s{i}": jax.random.key(50 + i) for i in range(3)}
+        deltas = {sid: [] for sid in streams}
+        server.open("s0", key=keys["s0"])
+        server.open("s1", key=keys["s1"])
+        deltas["s0"].append(server.ingest("s0", streams["s0"][:40]))
+        deltas["s1"].append(server.ingest("s1", streams["s1"][:96]))
+        server.open("s2", key=keys["s2"])  # table full -> evicts s0 (LRU)
+        assert "s0" in server.evicted and "s0" not in server
+        assert server.totals["evicted"] == 1
+        res0 = server.evicted["s0"]
+        assert res0["t_seen"] == 40
+        assert_session_matches_encode(
+            res0, deltas["s0"], streams["s0"][:40], keys["s0"], "evicted s0")
+        deltas["s2"].append(server.ingest("s2", streams["s2"]))
+        for sid in ("s1", "s2"):
+            res = server.close(sid)
+            assert_session_matches_encode(
+                res, deltas[sid], streams[sid], keys[sid], sid)
+
+    def test_defer_cadence_closing_frame_carries_all(self, rng):
+        """digitize_every_k=0: no mid-stream frames; the closing frame holds
+        the entire symbol stream and still matches the reference."""
+        ts = make_stream(rng, 128)
+        key = jax.random.key(11)
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              digitize_every_k=0)
+        res, deltas = feed_session(server, "s", ts, key, rng)
+        assert all(d["frames"] == 0 and d["n_new"] == 0 for d in deltas)
+        assert res["delta"]["frames"] == 1
+        assert res["delta"]["n_new"] == res["n_pieces"]
+        assert_session_matches_encode(res, deltas, ts, key, "defer")
+
+    def test_wire_accounting_consistent(self, rng):
+        """bytes_out decomposes exactly into 4B frame headers + 5B symbols."""
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              digitize_every_k=1)
+        ts = make_stream(rng, 160)
+        res, _ = feed_session(server, "s", ts, jax.random.key(0), rng)
+        t = server.totals
+        assert t["symbols_out"] == res["n_pieces"]
+        assert t["bytes_out"] == 4.0 * t["frames_out"] + 5.0 * t["symbols_out"]
+        assert t["points_in"] == 160
+        assert t["bytes_in"] == 4.0 * 160 + 4.0  # points + the t0 hello
+        rep = server.report(1.0)
+        assert rep["ms_per_symbol"] > 0 and np.isfinite(rep["wire_out_ratio"])
+
+    def test_dtw_monitor_scores_reconstruction(self, rng):
+        """The online monitor reproduces DTW(raw-so-far, piece recon)."""
+        from repro.core.receiver import pieces_from_wire
+        from repro.core.reconstruct import reconstruct_from_pieces
+        from repro.kernels import ops
+        from repro.launch.stream import _read_slot
+
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              digitize_every_k=1, dtw_every=2)
+        ts = make_stream(rng, 128)
+        server.open("s", key=jax.random.key(1))
+        for c in range(0, 128, WINDOW_CAP):
+            server.ingest("s", ts[c: c + WINDOW_CAP])
+        stats = server.session_stats("s")
+        assert stats["dtw"] is not None and np.isfinite(stats["dtw"])
+        sub = _read_slot(server._table, jnp.asarray(stats["slot"], jnp.int32))
+        lens, incs = pieces_from_wire(
+            sub.endpoints, sub.steps, sub.n_pieces, sub.t0)
+        rec = reconstruct_from_pieces(lens, incs, sub.n_pieces, sub.t0, 128)
+        want = float(ops.dtw(ts[None], np.asarray(rec)[None],
+                             force_ref=True)[0])
+        assert stats["dtw"] == pytest.approx(want, rel=1e-6)
+        server.close("s")
+
+    def test_error_paths(self):
+        server = StreamServer(CFG, max_sessions=1, window_cap=8)
+        server.open("a")
+        with pytest.raises(ValueError, match="already open"):
+            server.open("a")
+        with pytest.raises(RuntimeError, match="table full"):
+            server.open("b")
+        with pytest.raises(KeyError, match="unknown session"):
+            server.ingest("nope", np.zeros(4))
+        with pytest.raises(KeyError, match="unknown session"):
+            server.close("nope")
+        with pytest.raises(ValueError, match="max_sessions"):
+            StreamServer(CFG, max_sessions=0)
+        with pytest.raises(ValueError, match="digitize_every_k"):
+            StreamServer(CFG, digitize_every_k=-1)
+
+    def test_close_never_fed_session(self):
+        """A session closed before any points arrived yields an empty result
+        (no nan telemetry from the 0/0 compression ratio)."""
+        server = StreamServer(CFG, max_sessions=2, window_cap=8)
+        server.open("a")
+        res = server.close("a")
+        assert res["n_pieces"] == 0 and res["t_seen"] == 0
+        assert res["out"] is None and res["symbols"] == ""
+        assert res["delta"]["n_new"] == 0
+        server.open("b")  # slot is reusable
+        assert server.active_sessions == 1
