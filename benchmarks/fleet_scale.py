@@ -4,9 +4,38 @@ sharded ``repro.launch.fleet`` runtime on whatever devices exist -- flat
 ``data`` sharding, the streaming receiver at several digitize cadences, and
 the 2-D ``(pod, data)`` layout with hierarchical telemetry reduction (on the
 16x16 dry-run pod the same rows span 256 chips; here the mesh degenerates to
-the local device count)."""
+the local device count).  The resident stream service is metered per arrival
+tick in three shapes: raw-in (masked compressor scan), compressed-in (the
+transport's pieces mode: scatter + cadenced digitize), and the slab-rerun
+anti-pattern.
+
+CLI (the CI ``bench-artifacts`` job runs exactly this):
+
+    PYTHONPATH=src python -m benchmarks.fleet_scale --quick --out BENCH_fleet.json
+
+``BENCH_fleet.json`` schema (version ``bench_fleet/v1``):
+
+    {
+      "schema": "bench_fleet/v1",
+      "env": {"devices": int, "backend": str, "quick": bool},
+      "rows": [                      # one entry per benchmark row
+        {"name": str,                # e.g. "fleet_sharded_64x512_chunk128"
+         "us_per_call": float,       # mean wall latency per metered call
+         "points_per_s": float}      # derived throughput of that row
+      ],
+      "summary": {...}               # per-section dicts: the same keys
+    }                                # ``run()`` has always returned --
+                                     # latency / compression / wire ratios
+
+``rows`` is the stable machine-readable perf trajectory (compare across
+commits by row name); ``summary`` carries the richer per-section numbers
+(``fleet_compression_rate``, ``ms_per_symbol``, ``wire_in_ratio``,
+``resident_speedup``, ...).
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import List, Tuple
 
@@ -14,7 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.symed import SymEDConfig, symed_batch
+from repro.core.compress import pieces_on_wire
+from repro.core.symed import SymEDConfig, symed_batch, symed_encode_chunk
 from repro.data.synthetic import make_fleet
 from repro.launch.fleet import fleet_data_mesh, fleet_report, run_fleet
 from repro.launch.mesh import make_pod_data_mesh
@@ -23,19 +53,20 @@ from repro.launch.stream import StreamServer
 from benchmarks.common import timed
 
 
-def run() -> Tuple[List[tuple], dict]:
+def run(quick: bool = False) -> Tuple[List[tuple], dict]:
     cfg = SymEDConfig(tol=0.5, alpha=0.01, n_max=128, k_max=32, len_max=128)
     rows: List[tuple] = []
     summary = {}
-    for n_streams in (16, 64, 256):
-        fleet = jnp.asarray(make_fleet(n_streams, 512, seed=1))
+    t_len = 256 if quick else 512
+    for n_streams in (8, 32) if quick else (16, 64, 256):
+        fleet = jnp.asarray(make_fleet(n_streams, t_len, seed=1))
         out, dt = timed(
             lambda f=fleet: symed_batch(f, cfg, jax.random.key(0),
                                         reconstruct=False),
             warmup=1, iters=2,
         )
-        pts = n_streams * 512
-        rows.append((f"fleet_{n_streams}x512", 1e6 * dt, pts / dt))
+        pts = n_streams * t_len
+        rows.append((f"fleet_{n_streams}x{t_len}", 1e6 * dt, pts / dt))
         summary[f"streams_{n_streams}"] = {
             "points_per_s": pts / dt,
             "mean_pieces": float(jnp.mean(out["n_pieces"])),
@@ -52,29 +83,34 @@ def run() -> Tuple[List[tuple], dict]:
     n_dev = jax.device_count()
     round_up = lambda n: -(-n // n_dev) * n_dev
     mesh = fleet_data_mesh()
-    for n_streams, chunk, dk in (
+    chunk = 64 if quick else 128
+    combos = ((16, chunk, None), (16, chunk, 2)) if quick else (
         (64, None, None), (64, 128, None), (256, 128, None),
         (32, 128, 1), (32, 128, 2),
-    ):
+    )
+    for n_streams, c_len, dk in combos:
         n_streams = round_up(n_streams)
-        fleet = jnp.asarray(make_fleet(n_streams, 512, seed=1))
+        fleet = jnp.asarray(make_fleet(n_streams, t_len, seed=1))
         (out, tele), dt = timed(
-            lambda f=fleet, c=chunk, k=dk: run_fleet(
+            lambda f=fleet, c=c_len, k=dk: run_fleet(
                 f, cfg, jax.random.key(0), mesh, chunk_len=c,
                 digitize_every_k=k, reconstruct=False,
             ),
             warmup=1, iters=2,
         )
-        pts = n_streams * 512
-        mode = (f"chunk{chunk}_k{dk}" if dk else
-                f"chunk{chunk}" if chunk else "whole")
-        rows.append((f"fleet_sharded_{n_streams}x512_{mode}", 1e6 * dt, pts / dt))
+        pts = n_streams * t_len
+        mode = (f"chunk{c_len}_k{dk}" if dk else
+                f"chunk{c_len}" if c_len else "whole")
+        rows.append((f"fleet_sharded_{n_streams}x{t_len}_{mode}", 1e6 * dt,
+                     pts / dt))
         rep = fleet_report(tele, dt)
         summary[f"sharded_{n_streams}_{mode}"] = {
             "points_per_s": pts / dt,
             "devices": int(mesh.devices.size),
             "fleet_wire_bytes": rep["wire_bytes"],
             "fleet_compression_rate": rep["compression_rate"],
+            "wire_in_ratio": rep["wire_in_ratio"],
+            "wire_out_ratio": rep["wire_out_ratio"],
             "ms_per_symbol": rep["ms_per_symbol"],
         }
 
@@ -84,20 +120,20 @@ def run() -> Tuple[List[tuple], dict]:
     # the 2 x 256 two-pod mesh.
     n_pods = 2 if n_dev % 2 == 0 and n_dev >= 2 else 1
     pod_mesh = make_pod_data_mesh(n_pods, n_dev // n_pods)
-    n_streams = round_up(32)
-    fleet = jnp.asarray(make_fleet(n_streams, 512, seed=1))
+    n_streams = round_up(16 if quick else 32)
+    fleet = jnp.asarray(make_fleet(n_streams, t_len, seed=1))
     (out, tele), dt = timed(
         lambda: run_fleet(
-            fleet, cfg, jax.random.key(0), pod_mesh, chunk_len=128,
+            fleet, cfg, jax.random.key(0), pod_mesh, chunk_len=chunk,
             digitize_every_k=2, reconstruct=False, axis=("pod", "data"),
         ),
         warmup=1, iters=2,
     )
     rep = fleet_report(tele, dt)
-    rows.append((f"fleet_pods{n_pods}_{n_streams}x512_chunk128_k2", 1e6 * dt,
-                 n_streams * 512 / dt))
+    rows.append((f"fleet_pods{n_pods}_{n_streams}x{t_len}_chunk{chunk}_k2",
+                 1e6 * dt, n_streams * t_len / dt))
     summary["pod_data"] = {
-        "points_per_s": n_streams * 512 / dt,
+        "points_per_s": n_streams * t_len / dt,
         "streams": n_streams,
         "layout": f"{n_pods}x{n_dev // n_pods}",
         "fleet_compression_rate": rep["compression_rate"],
@@ -109,7 +145,7 @@ def run() -> Tuple[List[tuple], dict]:
     # step when the ReceiverState stays resident (repro.launch.stream), vs a
     # full re-encode of the materialized slab when it doesn't -- the
     # batch-replay anti-pattern a naive service falls into at steady state.
-    svc_streams, svc_len, svc_win = round_up(8), 256, 64
+    svc_streams, svc_len, svc_win = round_up(8), 128 if quick else 256, 64
     slab_np = np.asarray(make_fleet(svc_streams, svc_len, seed=3))
     server = StreamServer(cfg, max_sessions=svc_streams, window_cap=svc_win,
                           digitize_every_k=1)
@@ -130,6 +166,34 @@ def run() -> Tuple[List[tuple], dict]:
     for sid in sids:
         server.close(sid)
 
+    # compressed-in service tick: the transport's pieces mode.  Senders run
+    # the compressor (pre-materialized here, outside the metered region);
+    # the receiver's tick is a wire-buffer scatter + cadenced digitize.
+    pieces_server = StreamServer(cfg, max_sessions=svc_streams,
+                                 window_cap=svc_win, digitize_every_k=1)
+    for sid in sids:
+        pieces_server.open(sid)
+    states = {sid: None for sid in sids}
+    tick_arrivals = []
+    for c in range(0, svc_len, svc_win):
+        arr = {}
+        for i, sid in enumerate(sids):
+            w = slab_np[i, c: c + svc_win]
+            states[sid], ev = symed_encode_chunk(jnp.asarray(w), cfg,
+                                                 states[sid])
+            eps, steps = pieces_on_wire(ev, c)
+            arr[sid] = {"endpoints": eps, "steps": steps,
+                        "t_seen": c + len(w), "t0": float(slab_np[i, 0])}
+        tick_arrivals.append(arr)
+    pieces_server.ingest_pieces_many(tick_arrivals[0])  # compile
+    t0 = time.perf_counter()
+    for arr in tick_arrivals[1:]:
+        pieces_server.ingest_pieces_many(arr)
+    dt_pieces = (time.perf_counter() - t0) / max(len(tick_arrivals) - 1, 1)
+    pieces_rep = pieces_server.report(1.0)
+    for sid in sids:
+        pieces_server.close(sid)
+
     slab = jnp.asarray(slab_np)
     _, dt_slab = timed(
         lambda: symed_batch(slab, cfg, jax.random.key(0), reconstruct=False),
@@ -138,14 +202,55 @@ def run() -> Tuple[List[tuple], dict]:
     pts_tick = svc_streams * svc_win
     rows.append((f"service_resident_tick_{svc_streams}x{svc_len}_w{svc_win}",
                  1e6 * dt_resident, pts_tick / dt_resident))
+    rows.append((f"service_pieces_in_tick_{svc_streams}x{svc_len}_w{svc_win}",
+                 1e6 * dt_pieces, pts_tick / dt_pieces))
     rows.append((f"service_slab_rerun_tick_{svc_streams}x{svc_len}",
                  1e6 * dt_slab, pts_tick / dt_slab))
     summary["stream_service"] = {
         "sessions": svc_streams,
         "window": svc_win,
         "resident_tick_ms": 1e3 * dt_resident,
+        "pieces_in_tick_ms": 1e3 * dt_pieces,
         "slab_rerun_tick_ms": 1e3 * dt_slab,
         "resident_speedup": dt_slab / max(dt_resident, 1e-12),
         "wire_out_bytes": server.totals["bytes_out"],
+        "wire_in_ratio_pieces": pieces_rep["wire_in_ratio"],
     }
     return rows, summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized slabs (seconds, not minutes)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the machine-readable BENCH_fleet.json here")
+    args = ap.parse_args()
+
+    rows, summary = run(quick=args.quick)
+    print("name,us_per_call,points_per_s")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.1f}")
+    if args.out:
+        doc = {
+            "schema": "bench_fleet/v1",
+            "env": {
+                "devices": int(jax.device_count()),
+                "backend": jax.default_backend(),
+                "quick": bool(args.quick),
+            },
+            "rows": [
+                {"name": n, "us_per_call": round(us, 1),
+                 "points_per_s": round(d, 1)}
+                for n, us, d in rows
+            ],
+            "summary": summary,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,7 @@ __all__ = [
     "compressor_finalize",
     "compress_stream",
     "bridge_error_direct",
+    "pieces_on_wire",
 ]
 
 
@@ -207,6 +208,26 @@ def compressor_finalize(state: CompressorState) -> PieceEvent:
         length=jnp.where(has_piece, state.npts - 1, 0),
         inc=jnp.where(has_piece, state.last - state.seg_start, 0.0),
     )
+
+
+def pieces_on_wire(events: dict, step_offset: int):
+    """Sender-side wire encode: the (endpoint, arrival-step) tuples one
+    chunk's events put on the wire.
+
+    ``events`` are the per-step arrays of one ``symed_encode_chunk`` window;
+    ``step_offset`` is the global stream index of the window's first point.
+    Returns host arrays ``(endpoints f32[n], steps i32[n])`` -- exactly what
+    the receiver's ``compact_chunk`` scatter records for the same window, so
+    a ``repro.launch.transport`` pieces-mode sender reproduces the raw-mode
+    receiver state bitwise.
+    """
+    import numpy as np
+
+    emit = np.asarray(events["emit"]).reshape(-1)
+    endpoints = np.asarray(events["endpoint"]).reshape(-1)
+    idx = np.nonzero(emit)[0]
+    return (endpoints[idx].astype(np.float32),
+            (idx + step_offset).astype(np.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("len_max",))

@@ -23,14 +23,18 @@ bitwise-identical by construction.
 from __future__ import annotations
 
 import functools
+import struct
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
-    "DELTA_FRAME_HEADER_BYTES", "DELTA_SYMBOL_BYTES", "append_tail",
-    "compact_chunk", "compact_events", "delta_frame_bytes",
-    "pieces_from_wire",
+    "DELTA_FRAME_HEADER_BYTES", "DELTA_SYMBOL_BYTES", "PIECE_TUPLE_BYTES",
+    "append_tail", "compact_chunk", "compact_events", "delta_frame_bytes",
+    "pack_delta_frame", "pack_piece_tuples", "pieces_from_wire",
+    "unpack_delta_frame", "unpack_piece_tuples",
 ]
 
 # Symbol-delta frame layout (the service's outbound counterpart of the
@@ -38,15 +42,66 @@ __all__ = [
 # piece, a 1-byte symbol label and the 4-byte raw endpoint -- so downstream
 # consumers can resync the piece chain without replaying the stream.  Host
 # bookkeeping (repro.launch.stream) uses the constants directly to avoid
-# device scalars in its steady-state loop.
+# device scalars in its steady-state loop.  ``pack_delta_frame`` /
+# ``unpack_delta_frame`` are the byte-level realization of exactly this
+# layout: ``len(pack_delta_frame(l, e)) == delta_frame_bytes(len(l))``, and
+# ``repro.launch.transport`` puts these bytes on a real socket.
 DELTA_FRAME_HEADER_BYTES = 4.0
 DELTA_SYMBOL_BYTES = 5.0  # 1B label + 4B endpoint
+
+# Inbound compressed-piece tuple (``repro.launch.transport`` pieces mode):
+# the paper's sender transmits one raw f32 endpoint per piece; a batched
+# transport must also carry the arrival step explicitly (u32), since framing
+# detaches pieces from the ingest clock.
+PIECE_TUPLE_BYTES = 8.0  # 4B endpoint + 4B arrival step
+
+# numpy record layouts of the two wire payloads (big-endian, packed)
+_DELTA_REC = np.dtype([("label", "u1"), ("endpoint", ">f4")])
+_PIECE_REC = np.dtype([("endpoint", ">f4"), ("step", ">u4")])
 
 
 def delta_frame_bytes(n_new: jax.Array) -> jax.Array:
     """Wire-out bytes of one symbol-delta frame carrying ``n_new`` symbols."""
     return (DELTA_FRAME_HEADER_BYTES
             + DELTA_SYMBOL_BYTES * jnp.asarray(n_new, jnp.float32))
+
+
+def pack_delta_frame(labels, endpoints) -> bytes:
+    """Serialize one symbol-delta frame: ``!I`` count + per-symbol record.
+
+    Per symbol: u1 label + big-endian f32 raw endpoint (the documented
+    4 B header + 5 B/symbol layout; labels wrap at 256 like
+    ``symbols_to_string``'s alphabet fold).
+    """
+    labels = np.asarray(labels)
+    rec = np.empty(labels.shape[0], _DELTA_REC)
+    rec["label"] = labels.astype(np.int64) % 256
+    rec["endpoint"] = np.asarray(endpoints, np.float32)
+    return struct.pack("!I", labels.shape[0]) + rec.tobytes()
+
+
+def unpack_delta_frame(buf: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of ``pack_delta_frame``: ``(labels i32, endpoints f32)``."""
+    (n,) = struct.unpack_from("!I", buf)
+    rec = np.frombuffer(buf, _DELTA_REC, count=n, offset=4)
+    return rec["label"].astype(np.int32), rec["endpoint"].astype(np.float32)
+
+
+def pack_piece_tuples(endpoints, steps) -> bytes:
+    """Serialize inbound piece tuples: per piece ``>f4`` endpoint + ``>u4``
+    arrival step (``PIECE_TUPLE_BYTES`` each, no header -- the transport's
+    DATA frame carries the count)."""
+    endpoints = np.asarray(endpoints, np.float32)
+    rec = np.empty(endpoints.shape[0], _PIECE_REC)
+    rec["endpoint"] = endpoints
+    rec["step"] = np.asarray(steps, np.int64)
+    return rec.tobytes()
+
+
+def unpack_piece_tuples(buf: bytes, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of ``pack_piece_tuples``: ``(endpoints f32, steps i32)``."""
+    rec = np.frombuffer(buf, _PIECE_REC, count=n)
+    return rec["endpoint"].astype(np.float32), rec["step"].astype(np.int32)
 
 
 def compact_chunk(

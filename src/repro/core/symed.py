@@ -58,6 +58,7 @@ __all__ = [
     "symed_receive_chunk",
     "symed_receive_finish",
     "symed_receive_masked_chunk",
+    "symed_receive_masked_pieces",
     "symed_batch",
     "symbols_to_string",
 ]
@@ -588,6 +589,121 @@ def symed_receive_masked_chunk(
         tol=cfg.tol, alpha=cfg.alpha, scl=cfg.scl, len_max=cfg.len_max,
         n_max=cfg.n_max, k_min=cfg.k_min, k_max=cfg.k_max,
         lloyd_iters=cfg.lloyd_iters, digitize_every_k=int(digitize_every_k),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_max", "k_min", "k_max", "lloyd_iters", "digitize_every_k",
+    ),
+)
+def _masked_receive_pieces(
+    piece_endpoints, piece_steps, n_valid, hello, t_seen_new, state, *, tol,
+    scl, n_max, k_min, k_max, lloyd_iters, digitize_every_k,
+):
+    p_cap = piece_endpoints.shape[0]
+
+    # --- wire: the sender already ran the compressor; just scatter ---------
+    # ``compact_chunk`` with a prefix mask places the arriving tuples at
+    # slots [n_pieces, n_pieces + n_valid) -- the identical buffer content a
+    # raw-mode ingest of the same stream would have produced, which is what
+    # keeps the end-of-stream outputs bitwise-equal across transport modes.
+    t0 = jnp.where(state.t_seen == 0, hello, state.t0)
+    valid = jnp.arange(p_cap) < n_valid
+    endpoints, steps, n_pieces = compact_chunk(
+        state.endpoints, state.steps, state.n_pieces,
+        valid, jnp.asarray(piece_endpoints, jnp.float32),
+        jnp.asarray(piece_steps, jnp.int32),
+    )
+    t_seen = jnp.maximum(state.t_seen, t_seen_new)
+    chunks = state.chunks + (n_valid > 0).astype(jnp.int32)
+
+    # --- receiver: digitize cadence identical to the masked raw path ------
+    n_dig_prev = state.dig.n
+    if digitize_every_k:
+        def digitize(dig, symbols_online):
+            return _digitize_new_pieces(
+                dig, symbols_online, endpoints, steps, n_pieces, t0,
+                tol=tol, scl=scl, n_max=n_max, k_min=k_min, k_max=k_max,
+                lloyd_iters=lloyd_iters,
+            )
+
+        def skip_dig(dig, symbols_online):
+            return dig, symbols_online
+
+        emitted = (n_valid > 0) & (chunks % digitize_every_k == 0)
+        dig, symbols_online = jax.lax.cond(
+            emitted, digitize, skip_dig, state.dig, state.symbols_online,
+        )
+    else:
+        emitted = jnp.zeros((), bool)
+        dig, symbols_online = state.dig, state.symbols_online
+
+    new_state = ReceiverState(
+        comp=state.comp, dig=dig, endpoints=endpoints, steps=steps,
+        n_pieces=n_pieces, symbols_online=symbols_online,
+        t0=t0, t_seen=t_seen, chunks=chunks,
+    )
+    info = {
+        "n_pieces": n_pieces,
+        "n_digitized": dig.n,
+        "t_seen": t_seen,
+        "symbols_online": symbols_online,
+        "symbol_delta": _symbol_delta_info(
+            n_dig_prev, dig, symbols_online, endpoints, emitted
+        ),
+    }
+    return new_state, info
+
+
+def symed_receive_masked_pieces(
+    piece_endpoints: jax.Array,
+    piece_steps: jax.Array,
+    n_valid: jax.Array,
+    hello: jax.Array,
+    t_seen: jax.Array,
+    cfg: SymEDConfig,
+    state: ReceiverState,
+    *,
+    digitize_every_k: int = 1,
+) -> Tuple[ReceiverState, Dict[str, jax.Array]]:
+    """Compressed-in variant of ``symed_receive_masked_chunk``.
+
+    The sender ran ``CompressorState`` locally (``repro.launch.transport``
+    pieces mode) and ships finished pieces instead of raw points: the first
+    ``n_valid`` of the padded ``(P,)`` tuples ``(piece_endpoints[i],
+    piece_steps[i])`` are scattered straight into the wire buffers -- the
+    per-slot compressor never runs.  ``hello`` is the sender's 4-byte t0
+    payload (consumed only while ``state.t_seen == 0``); ``t_seen`` is the
+    sender's cumulative point clock after this frame (runtime scalar; the
+    receiver needs it for cr/drr and as the close-time arrival clock).
+    ``n_valid = 0`` with ``t_seen > 0`` still advances the clock (a frame
+    whose window finished no piece).
+
+    Bitwise contract: scattering the tuples a sender-side
+    ``symed_encode_chunk`` emitted (via ``compress_stream``'s arithmetic --
+    the same per-point program the raw-mode receiver runs) yields the exact
+    wire-buffer content of raw-mode ingest, and the digitizer evolution
+    depends only on piece arrival order, so ``symed_receive_finish`` outputs
+    and concatenated symbol deltas stay bitwise-equal to ``symed_encode``
+    across transport modes (tested in ``tests/test_transport.py``).
+
+    The sender's trailing flush arrives as an ordinary piece tuple with
+    ``step = t_seen`` (the CLOSE frame's payload); the blank slot compressor
+    then has nothing to flush at ``symed_receive_finish``.
+
+    Single-slot semantics; ``jax.vmap`` over the leading axis for slot
+    tables (``repro.launch.stream.ingest_pieces_many`` does exactly that).
+    """
+    if digitize_every_k < 0:
+        raise ValueError(f"digitize_every_k must be >= 0, got {digitize_every_k}")
+    return _masked_receive_pieces(
+        piece_endpoints, piece_steps, jnp.asarray(n_valid, jnp.int32),
+        jnp.asarray(hello, jnp.float32), jnp.asarray(t_seen, jnp.int32),
+        state, tol=cfg.tol, scl=cfg.scl, n_max=cfg.n_max, k_min=cfg.k_min,
+        k_max=cfg.k_max, lloyd_iters=cfg.lloyd_iters,
+        digitize_every_k=int(digitize_every_k),
     )
 
 

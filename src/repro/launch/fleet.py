@@ -313,6 +313,13 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, f
     clamped, so the report never divides by zero.  ``ms_per_symbol`` is the
     paper's per-symbol conversion latency metric (42ms/symbol in the paper's
     single-CPU setup; amortized here over the whole fleet run).
+
+    Wire telemetry covers both directions, with the same keys
+    ``StreamServer.report`` uses: ``wire_in_bytes``/``wire_in_ratio`` is the
+    sender->receiver traffic against the raw stream (the paper's headline
+    9.5% compression of network traffic; here the 4 B/piece endpoints +
+    hello, i.e. ``wire_bytes``), ``wire_out_bytes``/``wire_out_ratio`` the
+    receiver's outbound symbol-delta frames.
     """
     t = {k: float(v) for k, v in tele.items()}
     dt = max(wall_seconds, 1e-9)
@@ -325,6 +332,8 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, f
         "ms_per_symbol": 1e3 * dt / max(t["pieces"], 1.0),
         "compression_rate": t["wire_bytes"] / max(t["raw_bytes"], 1.0),
         "mean_pieces_per_stream": t["pieces"] / max(t["streams"], 1.0),
+        "wire_in_bytes": t["wire_bytes"],
+        "wire_in_ratio": t["wire_bytes"] / max(t["raw_bytes"], 1.0),
         # wire-out telemetry is absent from pre-delta callers' dicts
         "wire_out_bytes": t.get("wire_out_bytes", 0.0),
         "wire_out_ratio": t.get("wire_out_bytes", 0.0) / max(t["wire_bytes"], 1.0),
@@ -390,7 +399,8 @@ def main():
     print(f"fleet pieces            : {int(rep['pieces'])} "
           f"({rep['mean_pieces_per_stream']:.1f}/stream)")
     print(f"fleet raw bytes         : {int(rep['raw_bytes']):,}")
-    print(f"fleet wire bytes        : {int(rep['wire_bytes']):,}")
+    print(f"fleet wire-in bytes     : {int(rep['wire_in_bytes']):,} "
+          f"(ratio {rep['wire_in_ratio']:.4f})")
     print(f"fleet wire-out bytes    : {int(rep['wire_out_bytes']):,} "
           f"(symbol-delta frames)")
     print(f"compression rate        : {rep['compression_rate']:.6f} "

@@ -69,12 +69,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.receiver import (
-    DELTA_FRAME_HEADER_BYTES, DELTA_SYMBOL_BYTES, pieces_from_wire,
+    DELTA_FRAME_HEADER_BYTES, DELTA_SYMBOL_BYTES, PIECE_TUPLE_BYTES,
+    pieces_from_wire,
 )
 from repro.core.reconstruct import reconstruct_from_pieces
 from repro.core.symed import (
     SymEDConfig, receiver_init, symbols_to_string, symed_receive_finish,
-    symed_receive_masked_chunk,
+    symed_receive_masked_chunk, symed_receive_masked_pieces,
 )
 from repro.kernels import ops
 
@@ -93,6 +94,19 @@ def _table_step(table, windows, n_valid, *, cfg, digitize_every_k):
     )(table, windows, n_valid)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "digitize_every_k"), donate_argnums=(0,)
+)
+def _table_step_pieces(table, endpoints, steps, n_valid, hello, t_seen, *,
+                       cfg, digitize_every_k):
+    """Compressed-in service step: every slot scatters its padded pieces."""
+    return jax.vmap(
+        lambda s, e, st, n, h, t: symed_receive_masked_pieces(
+            e, st, n, h, t, cfg, s, digitize_every_k=digitize_every_k
+        )
+    )(table, endpoints, steps, n_valid, hello, t_seen)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _write_slot(table, slot, blank):
     """Reset one slot of the table to a blank state (open / reopen)."""
@@ -103,6 +117,40 @@ def _write_slot(table, slot, blank):
 def _read_slot(table, slot):
     """Extract one slot's ReceiverState (for finish / monitoring)."""
     return jax.tree.map(lambda l: l[slot], table)
+
+
+@jax.jit
+def _gather_slots(table, perm):
+    """Reorder/resize the table by gathering ``perm`` (autoscale shrink).
+
+    A pure gather: slot states move bitwise-unchanged, so the delta-
+    concatenation contract is untouched by any resize point.  Not donated --
+    the output shape differs from the input's.
+    """
+    return jax.tree.map(lambda l: l[perm], table)
+
+
+@jax.jit
+def _concat_slots(table, blanks):
+    """Append blank slots to the table (autoscale grow)."""
+    return jax.tree.map(
+        lambda l, b: jnp.concatenate([l, b], axis=0), table, blanks)
+
+
+def _new_delta() -> dict:
+    """Empty merged symbol-delta accumulator (one per sid per ingest call)."""
+    return {"labels": [], "endpoints": [], "n_new": 0, "frames": 0,
+            "bytes": 0.0}
+
+
+def _finalize_deltas(deltas: Dict[str, dict]) -> Dict[str, dict]:
+    """Concatenate each accumulator's per-round slices into flat arrays."""
+    for out in deltas.values():
+        out["labels"] = (np.concatenate(out["labels"])
+                         if out["labels"] else np.zeros((0,), np.int32))
+        out["endpoints"] = (np.concatenate(out["endpoints"])
+                            if out["endpoints"] else np.zeros((0,), np.float32))
+    return deltas
 
 
 @dataclasses.dataclass
@@ -142,12 +190,23 @@ class StreamServer:
         accumulated pieces and score DTW against the raw points seen so far
         (0 disables; enabling keeps each session's raw history on the host).
       dtw_band: Sakoe-Chiba radius for the monitor (None = full DTW).
-      evict_idle: when the table is full, ``open`` evicts the least-recently
-        active session (final output parked in ``server.evicted``) instead
-        of raising.
+      evict_idle: when the table is full *and cannot grow further*, ``open``
+        evicts the least-recently active session (final output parked in
+        ``server.evicted``) instead of raising.
+      autoscale: grow/shrink the donated slot table between steps.  The
+        capacity walks a power-of-two ladder from ``min_slots`` up to
+        ``max_sessions``: ``open`` on a full table doubles it (carrying every
+        live state), ``close``/eviction shrinks it once occupancy falls to a
+        quarter of the current size (live slots are compacted with a pure
+        gather, so states move bitwise-unchanged and the delta-concatenation
+        contract holds across every resize point).  Eviction only fires at
+        ``max_sessions``.  Each distinct capacity traces the batched step
+        once (between-steps cost, amortized at steady state).
+      min_slots: autoscale floor (default: the mesh device count, else 1).
       seed: base PRNG seed for per-session digitizer keys.
       mesh: optional 1-D ``(data,)`` mesh; the slot table shards over it
-        (``max_sessions`` must divide over the mesh devices).
+        (``max_sessions``, ``min_slots`` and every ladder capacity must
+        divide over the mesh devices).
     """
 
     def __init__(
@@ -160,6 +219,8 @@ class StreamServer:
         dtw_every: int = 0,
         dtw_band: Optional[int] = None,
         evict_idle: bool = False,
+        autoscale: bool = False,
+        min_slots: Optional[int] = None,
         seed: int = 0,
         mesh=None,
     ):
@@ -176,6 +237,15 @@ class StreamServer:
             raise ValueError(
                 f"max_sessions={max_sessions} must divide over the "
                 f"{mesh.devices.size}-device mesh")
+        if min_slots is None:
+            min_slots = mesh.devices.size if mesh is not None else 1
+        if not 1 <= min_slots <= max_sessions:
+            raise ValueError(
+                f"min_slots={min_slots} must be in [1, {max_sessions}]")
+        if mesh is not None and min_slots % mesh.devices.size:
+            raise ValueError(
+                f"min_slots={min_slots} must divide over the "
+                f"{mesh.devices.size}-device mesh")
         self.cfg = cfg
         self.max_sessions = int(max_sessions)
         self.window_cap = int(window_cap)
@@ -183,24 +253,39 @@ class StreamServer:
         self.dtw_every = int(dtw_every)
         self.dtw_band = dtw_band
         self.evict_idle = bool(evict_idle)
+        self.autoscale = bool(autoscale)
+        self.min_slots = int(min_slots)
+        # capacity ladder: min_slots * 2^i, clipped at max_sessions
+        self._ladder = [self.min_slots]
+        while self._ladder[-1] < self.max_sessions:
+            self._ladder.append(min(self._ladder[-1] * 2, self.max_sessions))
+        self.capacity = self.min_slots if autoscale else self.max_sessions
         self._mesh = mesh
         self._base_key = jax.random.key(seed)
         self._serial = 0            # sessions ever opened (key derivation)
         self._clock = 0             # ingest rounds (LRU ordering)
         self._sessions: Dict[str, _Session] = {}
-        self._free = list(range(self.max_sessions))
+        self._free = list(range(self.capacity))
         self.evicted: Dict[str, dict] = {}
         # fleet-wide wire accounting (the service's fleet_report counterpart)
         self.totals = {
             "points_in": 0, "bytes_in": 0.0, "symbols_out": 0,
             "frames_out": 0, "bytes_out": 0.0, "steps": 0,
             "opened": 0, "closed": 0, "evicted": 0,
+            "grows": 0, "shrinks": 0,
         }
-        blanks = jax.vmap(lambda k: receiver_init(cfg, k))(
-            jax.random.split(self._base_key, self.max_sessions))
-        if mesh is not None:
-            blanks = jax.device_put(blanks, NamedSharding(mesh, P("data")))
-        self._table = blanks
+        self._table = self._shard(self._blanks(self.capacity))
+
+    def _blanks(self, n: int):
+        """``n`` fresh blank slots (keys are placeholders; ``open`` reseeds)."""
+        return jax.vmap(lambda k: receiver_init(self.cfg, k))(
+            jax.random.split(self._base_key, n))
+
+    def _shard(self, table):
+        if self._mesh is not None:
+            table = jax.device_put(
+                table, NamedSharding(self._mesh, P("data")))
+        return table
 
     # ------------------------------------------------------------------ API
 
@@ -229,6 +314,8 @@ class StreamServer:
         """
         if stream_id in self._sessions:
             raise ValueError(f"session {stream_id!r} is already open")
+        if not self._free and self.capacity < self.max_sessions:
+            self._grow()
         if not self._free:
             if not self.evict_idle:
                 raise RuntimeError(
@@ -272,18 +359,14 @@ class StreamServer:
                 raise KeyError(f"unknown session {sid!r} (open it first)")
             w = np.asarray(w, np.float32).reshape(-1)
             wins[sid] = w
-        deltas = {
-            sid: {"labels": [], "endpoints": [], "n_new": 0, "frames": 0,
-                  "bytes": 0.0}
-            for sid in wins
-        }
+        deltas = {sid: _new_delta() for sid in wins}
         rounds = max(
             (len(w) + self.window_cap - 1) // self.window_cap
             for w in wins.values()
         ) if wins else 0
         for r in range(rounds):
-            padded = np.zeros((self.max_sessions, self.window_cap), np.float32)
-            n_valid = np.zeros((self.max_sessions,), np.int32)
+            padded = np.zeros((self.capacity, self.window_cap), np.float32)
+            n_valid = np.zeros((self.capacity,), np.int32)
             active = []
             for sid, w in wins.items():
                 part = w[r * self.window_cap: (r + 1) * self.window_cap]
@@ -314,37 +397,108 @@ class StreamServer:
             t_seen = np.asarray(info["t_seen"])
             for sid, part in active:
                 sess = self._sessions[sid]
-                n = int(n_new[sess.slot])
-                out = deltas[sid]
-                out["labels"].append(labels[sess.slot, :n])
-                out["endpoints"].append(endpoints[sess.slot, :n])
-                out["n_new"] += n
+                self._account_delta(
+                    sess, deltas[sid], labels[sess.slot],
+                    endpoints[sess.slot], int(n_new[sess.slot]),
+                    bool(emitted[sess.slot]))
                 sess.chunks += 1
                 sess.t_seen = int(t_seen[sess.slot])
                 sess.last_active = self._clock
-                sess.symbols_out += n
                 self.totals["points_in"] += len(part)
                 self.totals["bytes_in"] += 4.0 * len(part)
-                self.totals["symbols_out"] += n
-                if bool(emitted[sess.slot]):
-                    frame = DELTA_FRAME_HEADER_BYTES + DELTA_SYMBOL_BYTES * n
-                    sess.frames_out += 1
-                    sess.bytes_out += frame
-                    out["frames"] += 1
-                    out["bytes"] += frame
-                    self.totals["frames_out"] += 1
-                    self.totals["bytes_out"] += frame
                 if sess.raw is not None:
                     sess.raw.append(part)
                 if (self.dtw_every and sess.raw is not None
                         and sess.chunks % self.dtw_every == 0):
                     sess.dtw = self._monitor_dtw(sess)
-        for out in deltas.values():
-            out["labels"] = (np.concatenate(out["labels"])
-                             if out["labels"] else np.zeros((0,), np.int32))
-            out["endpoints"] = (np.concatenate(out["endpoints"])
-                                if out["endpoints"] else np.zeros((0,), np.float32))
-        return deltas
+        return _finalize_deltas(deltas)
+
+    def ingest_pieces_many(self, arrivals: Dict[str, dict]) -> Dict[str, dict]:
+        """Compressed-in counterpart of ``ingest_many``.
+
+        Each arrival carries pieces the *sender's* compressor finished
+        (``repro.launch.transport`` pieces mode) instead of raw points:
+        ``{"endpoints": (n,) f32, "steps": (n,) i32 arrival steps,
+        "t_seen": int cumulative sender point clock, "t0": float hello,
+        "wire_bytes": float actual inbound payload bytes (optional;
+        defaults to ``PIECE_TUPLE_BYTES`` per piece)}``.  Arrivals longer
+        than ``window_cap`` pieces split into consecutive rounds.  Returns
+        the same merged symbol-delta dicts as ``ingest_many``.  Raw-mode and
+        pieces-mode sessions may share one table (idle slots mask out of
+        either batched step), but a single session must stay in one mode.
+        """
+        pends = {}
+        for sid, a in arrivals.items():
+            if sid not in self._sessions:
+                raise KeyError(f"unknown session {sid!r} (open it first)")
+            pends[sid] = {
+                "endpoints": np.asarray(a["endpoints"], np.float32).reshape(-1),
+                "steps": np.asarray(a["steps"], np.int32).reshape(-1),
+                "t_seen": int(a["t_seen"]),
+                "t0": float(a["t0"]),
+                "wire_bytes": float(a.get("wire_bytes", 0.0)),
+            }
+        deltas = {sid: _new_delta() for sid in pends}
+        cap = self.window_cap
+        rounds = max(
+            ((len(p["endpoints"]) + cap - 1) // cap or 1)
+            for p in pends.values()
+        ) if pends else 0
+        for r in range(rounds):
+            pad_e = np.zeros((self.capacity, cap), np.float32)
+            pad_s = np.zeros((self.capacity, cap), np.int32)
+            n_valid = np.zeros((self.capacity,), np.int32)
+            hello = np.zeros((self.capacity,), np.float32)
+            t_seen_in = np.zeros((self.capacity,), np.int32)
+            active = []
+            for sid, p in pends.items():
+                part_e = p["endpoints"][r * cap: (r + 1) * cap]
+                part_s = p["steps"][r * cap: (r + 1) * cap]
+                if r > 0 and not len(part_e):
+                    continue
+                sess = self._sessions[sid]
+                pad_e[sess.slot, : len(part_e)] = part_e
+                pad_s[sess.slot, : len(part_s)] = part_s
+                n_valid[sess.slot] = len(part_e)
+                hello[sess.slot] = p["t0"]
+                t_seen_in[sess.slot] = p["t_seen"]
+                active.append((sid, len(part_e)))
+            if not active:
+                continue
+            args = [jnp.asarray(x)
+                    for x in (pad_e, pad_s, n_valid, hello, t_seen_in)]
+            if self._mesh is not None:
+                sharding = NamedSharding(self._mesh, P("data"))
+                args = [jax.device_put(x, sharding) for x in args]
+            self._table, info = _table_step_pieces(
+                self._table, *args,
+                cfg=self.cfg, digitize_every_k=self.digitize_every_k)
+            self.totals["steps"] += 1
+            self._clock += 1
+            d = info["symbol_delta"]
+            labels = np.asarray(d["labels"])
+            endpoints = np.asarray(d["endpoints"])
+            n_new = np.asarray(d["n_new"])
+            emitted = np.asarray(d["emitted"])
+            t_seen = np.asarray(info["t_seen"])
+            for sid, n_in in active:
+                sess = self._sessions[sid]
+                self._account_delta(
+                    sess, deltas[sid], labels[sess.slot],
+                    endpoints[sess.slot], int(n_new[sess.slot]),
+                    bool(emitted[sess.slot]))
+                if n_in:
+                    sess.chunks += 1
+                now_seen = int(t_seen[sess.slot])
+                self.totals["points_in"] += max(now_seen - sess.t_seen, 0)
+                sess.t_seen = now_seen
+                sess.last_active = self._clock
+                if r == 0:
+                    p = pends[sid]
+                    wire = (p["wire_bytes"]
+                            or PIECE_TUPLE_BYTES * len(p["endpoints"]))
+                    self.totals["bytes_in"] += wire
+        return _finalize_deltas(deltas)
 
     def close(self, stream_id: str) -> dict:
         """Flush the tail, emit the closing delta frame, free the slot.
@@ -379,6 +533,7 @@ class StreamServer:
             self.totals["bytes_out"] += frame
         self._free.append(sess.slot)
         self.totals["closed"] += 1
+        self._maybe_shrink()
         return {
             "stream_id": stream_id,
             "out": out,
@@ -393,20 +548,86 @@ class StreamServer:
         }
 
     def report(self, wall_seconds: float) -> Dict[str, float]:
-        """Host-side service summary (the fleet_report counterpart)."""
+        """Host-side service summary (the fleet_report counterpart).
+
+        ``wire_in_bytes``/``wire_in_ratio`` measure inbound traffic against
+        the raw-points equivalent (4 B/point): ~1 for raw-in transport,
+        ~``PIECE_TUPLE_BYTES / (4 * points-per-piece)`` when senders
+        compress locally (the paper's 9.5%-of-raw headline is this ratio's
+        sender-side half).
+        """
         t = {k: float(v) for k, v in self.totals.items()}
         dt = max(wall_seconds, 1e-9)
+        raw_bytes = 4.0 * t["points_in"]
         return {
             **t,
             "active": float(self.active_sessions),
+            "capacity": float(self.capacity),
             "wall_seconds": wall_seconds,
             "points_per_s": t["points_in"] / dt,
             "symbols_per_s": t["symbols_out"] / dt,
             "ms_per_symbol": 1e3 * dt / max(t["symbols_out"], 1.0),
+            "raw_bytes": raw_bytes,
+            "wire_in_bytes": t["bytes_in"],
+            "wire_in_ratio": t["bytes_in"] / max(raw_bytes, 1.0),
             "wire_out_ratio": t["bytes_out"] / max(t["bytes_in"], 1.0),
         }
 
     # ------------------------------------------------------------- internals
+
+    def _account_delta(self, sess: _Session, out: dict, labels_row,
+                       endpoints_row, n: int, emitted: bool) -> None:
+        """Fold one round's symbol delta for one session into its merged
+        accumulator + the session/fleet wire-out books (shared by the raw
+        and compressed-in ingest paths)."""
+        out["labels"].append(labels_row[:n])
+        out["endpoints"].append(endpoints_row[:n])
+        out["n_new"] += n
+        sess.symbols_out += n
+        self.totals["symbols_out"] += n
+        if emitted:
+            frame = DELTA_FRAME_HEADER_BYTES + DELTA_SYMBOL_BYTES * n
+            sess.frames_out += 1
+            sess.bytes_out += frame
+            out["frames"] += 1
+            out["bytes"] += frame
+            self.totals["frames_out"] += 1
+            self.totals["bytes_out"] += frame
+
+    def _grow(self) -> None:
+        """Double the slot table (next ladder capacity), carrying all state.
+
+        Runs between batched steps: live slots keep their indices, the new
+        upper half is blank.  The next ``_table_step`` call at this capacity
+        traces once; steady state at the new size re-donates as before.
+        """
+        new_cap = self._ladder[self._ladder.index(self.capacity) + 1]
+        self._table = self._shard(_concat_slots(
+            self._table, self._blanks(new_cap - self.capacity)))
+        self._free.extend(range(self.capacity, new_cap))
+        self.capacity = new_cap
+        self.totals["grows"] += 1
+
+    def _maybe_shrink(self) -> None:
+        """Walk down the ladder while occupancy is at most a quarter of the
+        capacity (hysteresis: the shrunken table is at most half full, so a
+        single open cannot immediately force a re-grow)."""
+        while self.autoscale and self.capacity > self.min_slots:
+            target = self._ladder[self._ladder.index(self.capacity) - 1]
+            if len(self._sessions) > target // 2:
+                return
+            # compact live slots (ascending, stable) into the low indices,
+            # fill the rest from free (blank or stale) slots
+            live = sorted(self._sessions.values(), key=lambda s: s.slot)
+            perm = [s.slot for s in live]
+            perm += [f for f in sorted(self._free)][: target - len(perm)]
+            self._table = self._shard(_gather_slots(
+                self._table, jnp.asarray(perm, jnp.int32)))
+            for new_slot, sess in enumerate(live):
+                sess.slot = new_slot
+            self._free = list(range(len(live), target))
+            self.capacity = target
+            self.totals["shrinks"] += 1
 
     def _monitor_dtw(self, sess: _Session) -> float:
         """Online reconstruction error: DTW(raw so far, pieces so far).
@@ -487,6 +708,13 @@ def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
     if args.max_slots % args.devices:
         ap.error(f"--max-slots {args.max_slots} must divide over "
                  f"--devices {args.devices}")
+    if args.min_slots is not None:
+        if not 1 <= args.min_slots <= args.max_slots:
+            ap.error(f"--min-slots {args.min_slots} must be in "
+                     f"[1, --max-slots {args.max_slots}]")
+        if args.min_slots % args.devices:
+            ap.error(f"--min-slots {args.min_slots} must divide over "
+                     f"--devices {args.devices}")
 
 
 def main():
@@ -505,6 +733,11 @@ def main():
                     help="online DTW monitor cadence in windows (0: off)")
     ap.add_argument("--evict", action="store_true",
                     help="LRU-evict when sessions exceed slots")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="grow/shrink the slot table between steps "
+                         "(power-of-two ladder from --min-slots)")
+    ap.add_argument("--min-slots", type=int, default=None,
+                    help="autoscale floor (default: --devices)")
     ap.add_argument("--verify", action="store_true",
                     help="check delta concatenation against symed_encode")
     ap.add_argument("--devices", type=int, default=1,
@@ -524,7 +757,8 @@ def main():
     server = StreamServer(
         cfg, max_sessions=args.max_slots, window_cap=args.window,
         digitize_every_k=args.digitize_every, dtw_every=args.dtw_every,
-        evict_idle=args.evict, seed=args.seed, mesh=mesh,
+        evict_idle=args.evict, autoscale=args.autoscale,
+        min_slots=args.min_slots, seed=args.seed, mesh=mesh,
     )
     data = np.asarray(make_fleet(args.sessions, args.length, seed=args.seed))
     keys = jax.random.split(jax.random.key(args.seed), args.sessions)
@@ -560,10 +794,19 @@ def main():
 
     rep = server.report(wall)
     print(f"devices / table shards  : {args.devices}")
-    print(f"slot table              : {args.max_slots} slots, "
+    print(f"slot table              : {args.max_slots} slots"
+          f"{' (autoscaled)' if args.autoscale else ''}, "
           f"window cap {args.window}, pattern {args.arrival_pattern}")
     print(f"sessions                : {int(rep['opened'])} opened, "
           f"{int(rep['closed'])} closed, {int(rep['evicted'])} evicted")
+    # stable machine-readable summary (CI smoke jobs grep these key=value
+    # pairs; keep the keys backward-compatible)
+    print("stream_summary "
+          f"opened={int(rep['opened'])} closed={int(rep['closed'])} "
+          f"evicted={int(rep['evicted'])} capacity={int(rep['capacity'])} "
+          f"grows={int(rep['grows'])} shrinks={int(rep['shrinks'])} "
+          f"wire_in_bytes={int(rep['wire_in_bytes'])} "
+          f"wire_out_bytes={int(rep['bytes_out'])}")
     print(f"wall time               : {rep['wall_seconds']:.2f}s "
           f"({int(rep['steps'])} batched steps)")
     print(f"points in               : {int(rep['points_in'])} "

@@ -311,7 +311,7 @@ def _parse_fleet_stdout(stdout: str) -> dict:
         name, rest = name.strip(), rest.strip()
         if name == "fleet pieces":
             vals["pieces"] = int(rest.split()[0])
-        elif name == "fleet wire bytes":
+        elif name == "fleet wire-in bytes":
             vals["wire_bytes"] = int(rest.split()[0].replace(",", ""))
         elif name == "fleet wire-out bytes":
             vals["wire_out_bytes"] = int(rest.split()[0].replace(",", ""))

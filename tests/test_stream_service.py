@@ -230,6 +230,107 @@ class TestDeltaEquivalence:
         with pytest.raises(ValueError, match="digitize_every_k"):
             StreamServer(CFG, digitize_every_k=-1)
 
+    @given(st.integers(0, 3))
+    @settings(max_examples=6, deadline=None)
+    def test_autoscale_bitwise_across_resizes(self, seed):
+        """Sessions churning through an autoscaled table: grows on open
+        pressure, shrinks on drain-down, and every session's delta stream
+        stays bitwise-equal to its one-shot reference across each resize
+        point (resize is a pure concat/gather of slot states)."""
+        rng = np.random.default_rng(6000 + seed)
+        server = StreamServer(CFG, max_sessions=8, window_cap=WINDOW_CAP,
+                              digitize_every_k=1 + seed % 3,
+                              autoscale=True, min_slots=1)
+        assert server.capacity == 1
+        n_sess = 6
+        streams = [make_stream(rng, 96) for _ in range(n_sess)]
+        keys = [jax.random.key(700 + seed * 10 + i) for i in range(n_sess)]
+        deltas = {i: [] for i in range(n_sess)}
+        results = {}
+        for i in range(n_sess):
+            server.open(f"s{i}", key=keys[i])
+        assert server.capacity == 8 and server.totals["grows"] == 3
+        cursors = [0] * n_sess
+        while any(c < 96 for c in cursors):
+            live = [i for i in range(n_sess)
+                    if cursors[i] < 96 and f"s{i}" in server]
+            batch = {}
+            for i in live:
+                n = int(rng.integers(8, 40))
+                batch[f"s{i}"] = streams[i][cursors[i]: cursors[i] + n]
+                cursors[i] = min(cursors[i] + n, 96)
+            for sid, d in server.ingest_many(batch).items():
+                deltas[int(sid[1:])].append(d)
+            # drain finished sessions as they complete -> shrink mid-run
+            for i in list(live):
+                if cursors[i] >= 96:
+                    results[i] = server.close(f"s{i}")
+        assert server.totals["shrinks"] >= 1, server.totals
+        assert server.capacity == server.min_slots == 1
+        for i in range(n_sess):
+            assert_session_matches_encode(
+                results[i], deltas[i], streams[i], keys[i],
+                f"autoscale seed={seed} session={i}")
+
+    def test_autoscale_eviction_only_at_max(self, rng):
+        """While the ladder has headroom, open pressure grows the table;
+        eviction fires only once capacity == max_sessions."""
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              autoscale=True, min_slots=1, evict_idle=True)
+        for i in range(4):
+            server.open(f"s{i}")
+            server.ingest(f"s{i}", make_stream(rng, 16))
+        assert server.totals == {**server.totals, "grows": 2, "evicted": 0}
+        assert server.capacity == 4
+        server.open("s4")  # at max: LRU eviction, no further grow
+        assert server.totals["evicted"] == 1 and server.totals["grows"] == 2
+        assert "s0" in server.evicted
+
+    def test_autoscale_validation(self):
+        with pytest.raises(ValueError, match="min_slots"):
+            StreamServer(CFG, max_sessions=4, min_slots=8)
+        with pytest.raises(ValueError, match="min_slots"):
+            StreamServer(CFG, max_sessions=4, min_slots=0)
+
+    def test_pieces_ingest_matches_raw_ingest(self, rng):
+        """``ingest_pieces_many`` fed the sender's own piece tuples yields
+        the identical receiver state / outputs as raw-window ingest."""
+        from repro.core.compress import compressor_finalize, pieces_on_wire
+        from repro.core.symed import symed_encode_chunk
+
+        ts = make_stream(rng, 128)
+        key = jax.random.key(21)
+        raw_srv = StreamServer(CFG, max_sessions=2, window_cap=WINDOW_CAP,
+                               digitize_every_k=1)
+        res_raw, deltas_raw = feed_session(raw_srv, "s", ts, key, rng)
+
+        pcs_srv = StreamServer(CFG, max_sessions=2, window_cap=WINDOW_CAP,
+                               digitize_every_k=1)
+        pcs_srv.open("s", key=key)
+        deltas, state, off = [], None, 0
+        for c in range(0, 128, 32):
+            w = ts[c: c + 32]
+            state, ev = symed_encode_chunk(jnp.asarray(w), CFG, state)
+            eps, steps = pieces_on_wire(ev, off)
+            off += len(w)
+            deltas.append(pcs_srv.ingest_pieces_many({"s": {
+                "endpoints": eps, "steps": steps, "t_seen": off,
+                "t0": float(ts[0])}})["s"])
+        tail = compressor_finalize(state)
+        if bool(tail.emit):
+            deltas.append(pcs_srv.ingest_pieces_many({"s": {
+                "endpoints": [float(tail.endpoint)], "steps": [off],
+                "t_seen": off, "t0": float(ts[0])}})["s"])
+        res_pcs = pcs_srv.close("s")
+        assert_session_matches_encode(res_pcs, deltas, ts, key, "pieces-in")
+        for name in res_raw["out"]:
+            if name == "symbol_delta":
+                continue  # closing-frame split differs (tail digitized at
+                          # tail-ingest vs at close); the concat is checked
+            np.testing.assert_array_equal(
+                np.asarray(res_pcs["out"][name]),
+                np.asarray(res_raw["out"][name]), err_msg=name)
+
     def test_close_never_fed_session(self):
         """A session closed before any points arrived yields an empty result
         (no nan telemetry from the 0/0 compression ratio)."""
