@@ -1,0 +1,29 @@
+"""symlint: repo-native static analysis for the SymED codebase.
+
+``python -m repro.analysis`` (or the ``symlint`` entry point) sweeps
+``src``/``examples``/``benchmarks`` and enforces the contracts the ROADMAP
+states as standing policy but until now checked only by review:
+
+  ======  ==================  ==============================================
+  SL001   compat-policy       version-sensitive JAX names via jax_compat
+  SL002   retrace-hazard      no tracer misuse / per-call retraces under jit
+  SL003   donation-aliasing   donated buffers rebound before reuse
+  SL004   host-sync           no hidden device syncs in marked hot paths
+  SL005   wire-consistency    encoder/decoder struct layouts agree by bytes
+  ======  ==================  ==============================================
+
+Pure AST analysis -- the swept code is never imported or executed, so the
+pass runs in CI without JAX initialization cost (and on files that would
+fail to import).  Suppress one line with ``# symlint: disable=SL00x``;
+grandfathered findings live in ``.symlint-baseline.json`` with written
+justifications.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    AnalysisResult, Baseline, Finding, Project, RULES, analyze, load_project,
+)
+from repro.analysis.cli import main  # noqa: F401
+
+__all__ = [
+    "AnalysisResult", "Baseline", "Finding", "Project", "RULES",
+    "analyze", "load_project", "main",
+]

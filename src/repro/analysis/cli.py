@@ -1,0 +1,158 @@
+"""symlint command line: ``python -m repro.analysis`` / ``symlint``.
+
+Exit codes: 0 clean, 1 findings (or stale baseline entries / parse errors),
+2 usage error.  ``--format=github`` emits workflow annotation commands so
+the CI ``lint-analysis`` job shows findings inline on the PR diff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.engine import (
+    BASELINE_NAME, DEFAULT_SWEEP, RULES, AnalysisResult, Baseline,
+    analyze, load_project,
+)
+
+
+def find_root(start: Optional[Path] = None) -> Path:
+    """Walk up from ``start`` to the directory holding pyproject.toml."""
+    cur = (start or Path.cwd()).resolve()
+    for cand in [cur, *cur.parents]:
+        if (cand / "pyproject.toml").exists():
+            return cand
+    return cur
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="symlint",
+        description="Repo-native static analysis for the SymED codebase: "
+                    "compat routing (SL001), retrace hazards (SL002), "
+                    "donation aliasing (SL003), hot-path host syncs (SL004), "
+                    "wire-protocol consistency (SL005).")
+    p.add_argument("paths", nargs="*", type=Path,
+                   help=f"files/directories to sweep (default: "
+                        f"{'/'.join(DEFAULT_SWEEP)} under the repo root)")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--format", dest="fmt", default="text",
+                   choices=("text", "json", "github"))
+    p.add_argument("--baseline", type=Path, default=None,
+                   help=f"baseline file (default: <root>/{BASELINE_NAME})")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline: report grandfathered findings")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="rewrite the baseline from the current findings "
+                        "(keeps existing justifications) and exit 0")
+    p.add_argument("--list-rules", action="store_true")
+    p.add_argument("--show-baselined", action="store_true",
+                   help="also print baselined/suppressed findings (text)")
+    return p
+
+
+def _emit_text(result: AnalysisResult, show_baselined: bool) -> None:
+    for rel, err in result.parse_errors:
+        print(f"{rel}: SL000 parse error: {err}")
+    for f in result.findings:
+        where = f" [{f.context}]" if f.context else ""
+        print(f"{f.path}:{f.line}:{f.col}: {f.rule}{where}: {f.message}")
+    if show_baselined:
+        for f in result.baselined:
+            print(f"{f.path}:{f.line}:{f.col}: {f.rule} (baselined): "
+                  f"{f.message}")
+        for f in result.suppressed:
+            print(f"{f.path}:{f.line}:{f.col}: {f.rule} (suppressed): "
+                  f"{f.message}")
+    for e in result.stale_baseline:
+        print(f"{e['file']}: stale baseline entry {e['fingerprint']} "
+              f"({e['rule']}): finding no longer exists -- remove it")
+    n = len(result.findings)
+    print(f"symlint: {n} finding{'s' if n != 1 else ''}"
+          f" ({len(result.baselined)} baselined,"
+          f" {len(result.suppressed)} suppressed,"
+          f" {len(result.stale_baseline)} stale baseline entries)")
+
+
+def _emit_github(result: AnalysisResult) -> None:
+    for rel, err in result.parse_errors:
+        print(f"::error file={rel},title=SL000 parse error::{err}")
+    for f in result.findings:
+        print(f"::error file={f.path},line={f.line},col={f.col + 1},"
+              f"title={f.rule} {RULES[f.rule].name}::{f.message}")
+    for e in result.stale_baseline:
+        print(f"::error file={e['file']},title=stale baseline::"
+              f"entry {e['fingerprint']} ({e['rule']}) no longer matches "
+              f"any finding -- remove it from {BASELINE_NAME}")
+
+
+def _emit_json(result: AnalysisResult) -> None:
+    print(json.dumps({
+        "findings": [f.to_json() for f in result.findings],
+        "baselined": [f.to_json() for f in result.baselined],
+        "suppressed": [f.to_json() for f in result.suppressed],
+        "stale_baseline": result.stale_baseline,
+        "parse_errors": [
+            {"path": p, "error": e} for p, e in result.parse_errors],
+        "exit_code": result.exit_code,
+    }, indent=2))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import repro.analysis.rules  # noqa: F401 -- populate the registry
+
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rid in sorted(RULES):
+            r = RULES[rid]
+            print(f"{r.id}  {r.name}: {r.doc}")
+        return 0
+
+    root = find_root()
+    if args.paths:
+        paths: List[Path] = [p if p.is_absolute() else Path.cwd() / p
+                             for p in args.paths]
+        missing = [p for p in paths if not p.exists()]
+        if missing:
+            print(f"symlint: no such path: "
+                  f"{', '.join(str(p) for p in missing)}", file=sys.stderr)
+            return 2
+    else:
+        paths = [root / d for d in DEFAULT_SWEEP if (root / d).is_dir()]
+
+    rule_ids = None
+    if args.rules:
+        rule_ids = [r.strip().upper() for r in args.rules.split(",")
+                    if r.strip()]
+        unknown = [r for r in rule_ids if r not in RULES]
+        if unknown:
+            print(f"symlint: unknown rule(s) {', '.join(unknown)}; "
+                  f"known: {', '.join(sorted(RULES))}", file=sys.stderr)
+            return 2
+
+    baseline_path = args.baseline or (root / BASELINE_NAME)
+    baseline = None if args.no_baseline else Baseline(baseline_path)
+
+    project = load_project(root, paths)
+    result = analyze(project, rule_ids, baseline)
+
+    if args.write_baseline:
+        grandfather = result.findings + result.baselined
+        n = Baseline.write(baseline_path, grandfather,
+                           baseline.entries if baseline is not None else {})
+        print(f"symlint: wrote {n} entr{'y' if n == 1 else 'ies'} to "
+              f"{baseline_path}")
+        return 0
+
+    if args.fmt == "json":
+        _emit_json(result)
+    elif args.fmt == "github":
+        _emit_github(result)
+        n = len(result.findings)
+        print(f"symlint: {n} finding{'s' if n != 1 else ''}")
+    else:
+        _emit_text(result, args.show_baselined)
+    return result.exit_code

@@ -1,0 +1,253 @@
+"""Single-pass taint propagation over one function body.
+
+SL002 (tracers inside jit) and SL004 (device values in host hot paths) ask
+the same shape of question: *does this expression carry a value of suspect
+origin, and is it flowing into a sink that would concretize it?*  The walker
+here is deliberately simple -- one forward pass over the statements in
+source order, dotted-path environments, no fixpoint -- because a linter
+should be predictable: a developer reading the flagged line must be able to
+see the flow the rule saw.
+
+Taint model:
+
+  * seeds: taint the given dotted paths (traced parameters / device tables);
+  * calls: a call whose callee matches ``source_call`` taints its result;
+    conversion sinks (``float``/``int``/``bool``/``np.asarray``/``np.array``/
+    ``jax.device_get``/``.item()``/``.tolist()``) *un*-taint theirs (they are
+    the concretization point -- flagged once, then the value is host-side);
+    ``len()`` and static metadata (``.shape``/``.dtype``/``.ndim``/``.size``)
+    are never tainted (host-known without a sync);
+  * propagation: assignment targets inherit the RHS taint (and are cleansed
+    when the RHS is clean -- rebinding to a host value ends the taint);
+    attribute/subscript access on a tainted base stays tainted.
+
+Sinks are reported through a callback; nested ``def``s are skipped (they get
+their own analysis if jitted), nested lambdas are walked with their
+parameters tainted (vmap bodies).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, Iterable, Optional, Set
+
+from repro.analysis.astutil import dotted
+
+__all__ = ["STATIC_ATTRS", "CONVERTER_CALLS", "TaintWalker", "assigned_names"]
+
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding"}
+
+#: callee paths that concretize their (tainted) argument on the host
+CONVERTER_CALLS = {
+    "float", "int", "bool",
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get",
+}
+_CONVERTER_METHODS = {"item", "tolist"}
+_NEVER_TAINTED_CALLS = {"len", "isinstance", "range", "enumerate", "max",
+                        "min", "print", "sorted", "list", "tuple", "dict",
+                        "set", "repr", "str"}
+
+
+def assigned_names(node: ast.AST) -> Set[str]:
+    """Every simple name bound by assignments / for-targets under ``node``."""
+    out: Set[str] = set()
+
+    def targets(t):
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                targets(e)
+        elif isinstance(t, ast.Starred):
+            targets(t.value)
+
+    for n in ast.walk(node):
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                targets(t)
+        elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+            targets(n.target)
+        elif isinstance(n, (ast.For, ast.AsyncFor)):
+            targets(n.target)
+        elif isinstance(n, (ast.withitem,)) and n.optional_vars is not None:
+            targets(n.optional_vars)
+        elif isinstance(n, ast.NamedExpr):
+            targets(n.target)
+        elif isinstance(n, ast.comprehension):
+            targets(n.target)
+    return out
+
+
+class TaintWalker:
+    """Walk one function body, reporting ``(node, kind, detail)`` sinks.
+
+    ``kind`` is one of ``"convert"`` (explicit concretization call),
+    ``"branch"`` (if/while/ternary/assert on a tainted test).
+    """
+
+    def __init__(
+        self,
+        seeds: Iterable[str],
+        source_call: Callable[[ast.Call], bool],
+        on_sink: Callable[[ast.AST, str, str], None],
+        branch_sinks: bool = True,
+    ):
+        self.tainted: Set[str] = set(seeds)
+        self.source_call = source_call
+        self.on_sink = on_sink
+        self.branch_sinks = branch_sinks
+
+    # -- expression taint --------------------------------------------------
+
+    def expr_tainted(self, node: Optional[ast.AST]) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            path = dotted(node)
+            if path is not None and path in self.tainted:
+                return True
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            callee = dotted(node.func) or ""
+            method = (node.func.attr
+                      if isinstance(node.func, ast.Attribute) else "")
+            if (callee in CONVERTER_CALLS
+                    or method in _CONVERTER_METHODS
+                    or callee in _NEVER_TAINTED_CALLS):
+                return False  # result is host-side by construction
+            if self.source_call(node):
+                return True
+            return (any(self.expr_tainted(a) for a in node.args)
+                    or any(self.expr_tainted(k.value) for k in node.keywords))
+        if isinstance(node, (ast.BinOp,)):
+            return self.expr_tainted(node.left) or self.expr_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return (self.expr_tainted(node.left)
+                    or any(self.expr_tainted(c) for c in node.comparators))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.expr_tainted(node.body) or self.expr_tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.expr_tainted(node.value)
+        return False
+
+    # -- sink scan ---------------------------------------------------------
+
+    def _scan_expr(self, node: ast.AST) -> None:
+        """Find sinks inside one expression (ordered, lambda-aware)."""
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # nested defs get their own analysis
+        if isinstance(node, ast.Lambda):
+            sub = TaintWalker(
+                self.tainted | {a.arg for a in node.args.args},
+                self.source_call, self.on_sink, self.branch_sinks)
+            sub._scan_expr(node.body)
+            return
+        if isinstance(node, ast.Call):
+            callee = dotted(node.func) or ""
+            method = (node.func.attr
+                      if isinstance(node.func, ast.Attribute) else "")
+            args_tainted = (
+                any(self.expr_tainted(a) for a in node.args)
+                or any(self.expr_tainted(k.value) for k in node.keywords))
+            if callee in CONVERTER_CALLS and args_tainted:
+                self.on_sink(node, "convert", f"{callee}()")
+            elif (method in _CONVERTER_METHODS
+                    and self.expr_tainted(node.func.value)):
+                self.on_sink(node, "convert", f".{method}()")
+        if isinstance(node, ast.IfExp) and self.branch_sinks:
+            if self.expr_tainted(node.test):
+                self.on_sink(node, "branch", "conditional expression")
+        for child in ast.iter_child_nodes(node):
+            self._scan_expr(child)
+
+    # -- statement walk ----------------------------------------------------
+
+    def _assign(self, target: ast.AST, value_tainted: bool) -> None:
+        path = dotted(target)
+        if path is not None:
+            if value_tainted:
+                self.tainted.add(path)
+            else:
+                self.tainted.discard(path)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign(e, value_tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign(target.value, value_tainted)
+
+    def walk(self, body: Iterable[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._scan_expr(stmt.test)
+            if self.branch_sinks and self.expr_tainted(stmt.test):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                self.on_sink(stmt, "branch", f"`{kind}` statement")
+            self.walk(stmt.body)
+            self.walk(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Assert):
+            self._scan_expr(stmt.test)
+            if self.branch_sinks and self.expr_tainted(stmt.test):
+                self.on_sink(stmt, "branch", "`assert` statement")
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter)
+            self._assign(stmt.target, self.expr_tainted(stmt.iter))
+            self.walk(stmt.body)
+            self.walk(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._assign(item.optional_vars,
+                                 self.expr_tainted(item.context_expr))
+            self.walk(stmt.body)
+            return
+        if isinstance(stmt, (ast.Try,)):
+            self.walk(stmt.body)
+            for h in stmt.handlers:
+                self.walk(h.body)
+            self.walk(stmt.orelse)
+            self.walk(stmt.finalbody)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._scan_expr(stmt.value)
+            t = self.expr_tainted(stmt.value)
+            for target in stmt.targets:
+                self._assign(target, t)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._scan_expr(stmt.value)
+            self._assign(stmt.target, self.expr_tainted(stmt.value))
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._scan_expr(stmt.value)
+            if self.expr_tainted(stmt.value):
+                self._assign(stmt.target, True)
+            return
+        if isinstance(stmt, (ast.Return, ast.Expr)) and stmt.value is not None:
+            self._scan_expr(stmt.value)
+            return
+        # anything else: scan child expressions conservatively
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._scan_expr(child)

@@ -1,0 +1,183 @@
+"""Shared pass: find every ``jax.jit``-wrapped function in the sweep.
+
+SL002 (retrace hazards) needs each jitted function's static argument split,
+SL003 (donation aliasing) needs the donated positions at call sites, and
+SL004 (host sync) treats calls into jitted code as device-value sources --
+so the discovery runs once per project and the result is cached.
+
+Two spellings are recognized:
+
+  * decorator form -- ``@jax.jit`` or
+    ``@functools.partial(jax.jit, static_argnames=..., donate_argnums=...)``
+    (bare ``partial`` too) directly on a ``def``;
+  * assignment form -- ``g = jax.jit(f, donate_argnums=...)`` where ``f`` is
+    a name or lambda; the wrapper is registered under ``g``.
+
+Resolution at call sites is by *bare name* across the whole sweep (this repo
+has no colliding jit names; a collision would simply merge their specs,
+which at worst over-reports -- the right failure direction for a linter).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.astutil import call_keywords, dotted, iter_functions
+
+__all__ = ["JitSpec", "jit_registry", "JIT_WRAPPER_PATHS"]
+
+#: dotted callables recognized as the jit entry point
+JIT_WRAPPER_PATHS = {"jax.jit", "jit"}
+_PARTIAL_PATHS = {"functools.partial", "partial"}
+
+
+@dataclasses.dataclass(frozen=True)
+class JitSpec:
+    """One jitted function: where it lives and how its arguments split."""
+
+    name: str                    # bare registration name (call-site key)
+    qualname: str
+    relpath: str
+    line: int
+    params: Tuple[str, ...]      # positional-or-keyword parameter names
+    static_argnames: frozenset
+    static_argnums: Tuple[int, ...]
+    donate_argnums: Tuple[int, ...]
+    donate_argnames: frozenset
+    func_node: Optional[ast.AST]  # the def/lambda, when syntactically present
+
+    @property
+    def traced_params(self) -> frozenset:
+        """Parameter names whose values are traced (non-static)."""
+        static = set(self.static_argnames)
+        for i in self.static_argnums:
+            if i < len(self.params):
+                static.add(self.params[i])
+        return frozenset(self.params) - static
+
+    def donated_positions(self) -> Tuple[int, ...]:
+        pos = list(self.donate_argnums)
+        for n in self.donate_argnames:
+            if n in self.params:
+                pos.append(self.params.index(n))
+        return tuple(sorted(set(pos)))
+
+
+def _str_tuple(node: ast.expr) -> Tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(
+            e.value for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str))
+    return ()
+
+
+def _int_tuple(node: ast.expr) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(
+            e.value for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, int))
+    return ()
+
+
+def _jit_call_opts(call: ast.Call) -> Optional[dict]:
+    """``jax.jit`` call (or partial over it) -> its keyword split, else None."""
+    if dotted(call.func) not in JIT_WRAPPER_PATHS:
+        return None
+    kw = call_keywords(call)
+    return {
+        "static_argnames": frozenset(_str_tuple(kw["static_argnames"]))
+        if "static_argnames" in kw else frozenset(),
+        "static_argnums": _int_tuple(kw["static_argnums"])
+        if "static_argnums" in kw else (),
+        "donate_argnums": _int_tuple(kw["donate_argnums"])
+        if "donate_argnums" in kw else (),
+        "donate_argnames": frozenset(_str_tuple(kw["donate_argnames"]))
+        if "donate_argnames" in kw else frozenset(),
+    }
+
+
+def _decorator_opts(dec: ast.expr) -> Optional[dict]:
+    """Jit options from a decorator expression, if it is a jit decorator."""
+    if dotted(dec) in JIT_WRAPPER_PATHS:  # bare @jax.jit
+        return {"static_argnames": frozenset(), "static_argnums": (),
+                "donate_argnums": (), "donate_argnames": frozenset()}
+    if isinstance(dec, ast.Call):
+        if dotted(dec.func) in _PARTIAL_PATHS and dec.args:
+            inner = dec.args[0]
+            if dotted(inner) in JIT_WRAPPER_PATHS:
+                # partial(jax.jit, **opts): options live on the partial call
+                fake = ast.Call(func=inner, args=[], keywords=dec.keywords)
+                return _jit_call_opts(fake)
+        return _jit_call_opts(dec)  # @jax.jit(static_argnames=...)
+    return None
+
+
+def _func_params(node: ast.AST) -> Tuple[str, ...]:
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+        return ()
+    a = node.args
+    names = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+    return tuple(names) + tuple(p.arg for p in a.kwonlyargs)
+
+
+def _specs_for_file(relpath: str, tree: ast.AST) -> List[JitSpec]:
+    specs: List[JitSpec] = []
+    funcs = dict(iter_functions(tree))
+
+    # decorator form
+    for qual, node in funcs.items():
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            opts = _decorator_opts(dec)
+            if opts is None:
+                continue
+            specs.append(JitSpec(
+                name=node.name, qualname=qual, relpath=relpath,
+                line=node.lineno, params=_func_params(node),
+                func_node=node, **opts))
+            break
+
+    # assignment form: g = jax.jit(f_or_lambda, ...)
+    by_name = {n.name: n for n in funcs.values()
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        target = dotted(node.targets[0])
+        if target is None or not isinstance(node.value, ast.Call):
+            continue
+        opts = _jit_call_opts(node.value)
+        if opts is None or not node.value.args:
+            continue
+        wrapped = node.value.args[0]
+        func_node: Optional[ast.AST] = None
+        if isinstance(wrapped, ast.Lambda):
+            func_node = wrapped
+        elif isinstance(wrapped, ast.Name):
+            func_node = by_name.get(wrapped.id)
+        specs.append(JitSpec(
+            name=target.split(".")[-1], qualname=target, relpath=relpath,
+            line=node.lineno, params=_func_params(func_node)
+            if func_node is not None else (),
+            func_node=func_node, **opts))
+    return specs
+
+
+def jit_registry(project) -> Dict[str, List[JitSpec]]:
+    """Bare name -> every JitSpec registered under it, sweep-wide (cached)."""
+
+    def build() -> Dict[str, List[JitSpec]]:
+        reg: Dict[str, List[JitSpec]] = {}
+        for rel, sf in sorted(project.files.items()):
+            for spec in _specs_for_file(rel, sf.tree):
+                reg.setdefault(spec.name, []).append(spec)
+        return reg
+
+    return project.cache("jit_registry", build)

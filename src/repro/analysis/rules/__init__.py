@@ -1,0 +1,4 @@
+"""symlint rule modules -- importing this package populates the registry."""
+from repro.analysis.rules import (  # noqa: F401
+    compat, donation, hostsync, retrace, wire,
+)

@@ -1,0 +1,161 @@
+"""SL003 donation-aliasing: donated buffers must not be read after the call.
+
+``donate_argnums`` hands the argument's device buffer to XLA for reuse; the
+Python reference still exists but points at freed (or overwritten) memory.
+JAX raises on *some* post-donation uses and silently returns garbage on
+others (notably under buffer reuse on TPU), so the lint is strict:
+
+  * an argument passed at a donated position of a jitted call must be
+    **rebound before its next read** -- the idiomatic
+    ``state = step(state, ...)`` rebinding on the call statement itself
+    satisfies this;
+  * a donated argument inside a loop must be rebound *somewhere in the loop
+    body* (otherwise the second iteration reads the donated buffer).
+
+Donated operands are tracked as dotted paths, so ``self._table`` style
+resident-state donation (StreamServer) is checked the same as locals.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.astutil import dotted, iter_functions, parent_map
+from repro.analysis.engine import Finding, Project, register
+from repro.analysis.jaxinfo import jit_registry
+
+RULE = "SL003"
+
+
+def _binding_paths(node: ast.AST) -> Set[str]:
+    """Dotted paths rebound by assignments / for-targets under ``node``."""
+    out: Set[str] = set()
+
+    def targets(t):
+        p = dotted(t)
+        if p is not None:
+            out.add(p)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                targets(e)
+        elif isinstance(t, ast.Starred):
+            targets(t.value)
+
+    for n in ast.walk(node):
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                targets(t)
+        elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+            targets(n.target)
+        elif isinstance(n, (ast.For, ast.AsyncFor)):
+            targets(n.target)
+        elif isinstance(n, ast.NamedExpr):
+            targets(n.target)
+    return out
+
+
+def _enclosing(parents, node, kinds):
+    cur = parents.get(node)
+    while cur is not None and not isinstance(cur, kinds):
+        cur = parents.get(cur)
+    return cur
+
+
+def _containing_stmt(parents, node) -> Optional[ast.stmt]:
+    cur = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = parents.get(cur)
+    return cur
+
+
+@register(
+    RULE, "donation-aliasing",
+    "An array passed at a donate_argnums position of a jitted call must be "
+    "rebound before it is read again (including across loop iterations).",
+)
+def check(project: Project) -> Iterable[Finding]:
+    registry = jit_registry(project)
+    findings: List[Finding] = []
+    for rel, sf in sorted(project.files.items()):
+        parents = parent_map(sf.tree)
+        ctx = {n: q for q, n in iter_functions(sf.tree)}
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            callee = dotted(call.func)
+            if callee is None:
+                continue
+            for spec in registry.get(callee.split(".")[-1], ()):
+                donated = spec.donated_positions()
+                dn = set(spec.donate_argnames)
+                if not donated and not dn:
+                    continue
+                operands = [call.args[i] for i in donated
+                            if i < len(call.args)]
+                operands += [kw.value for kw in call.keywords
+                             if kw.arg in dn or (
+                                 kw.arg in spec.params
+                                 and spec.params.index(kw.arg) in donated)]
+                for op in operands:
+                    path = dotted(op)
+                    if path is None:
+                        continue
+                    _check_operand(sf, rel, parents, ctx, call, op, path,
+                                   spec.name, findings)
+    return findings
+
+
+def _check_operand(sf, rel, parents, ctx, call, op, path, jit_name,
+                   findings: List[Finding]) -> None:
+    stmt = _containing_stmt(parents, call)
+    if stmt is None:
+        return
+    qual = ""
+    cur = parents.get(call)
+    while cur is not None:
+        if cur in ctx:
+            qual = ctx[cur]
+            break
+        cur = parents.get(cur)
+
+    # rebinding on the call's own statement (``x = f(x)``) is the idiom
+    rebound_here = path in _binding_paths(stmt)
+
+    scope = _enclosing(
+        parents, call, (ast.FunctionDef, ast.AsyncFunctionDef)) or sf.tree
+    call_end = getattr(call, "end_lineno", call.lineno)
+
+    if not rebound_here:
+        # earliest later rebinding vs. earliest later read
+        rebind_line = None
+        for b in ast.walk(scope):
+            if isinstance(b, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                              ast.For, ast.AsyncFor, ast.NamedExpr)):
+                if path in _binding_paths(b) and b.lineno > call_end:
+                    if rebind_line is None or b.lineno < rebind_line:
+                        rebind_line = b.lineno
+        for n in ast.walk(scope):
+            p = dotted(n)
+            if p != path or not isinstance(getattr(n, "ctx", None), ast.Load):
+                continue
+            if n.lineno <= call_end:
+                continue
+            if rebind_line is not None and n.lineno >= rebind_line:
+                continue
+            findings.append(Finding(
+                rule=RULE, path=rel, line=n.lineno, col=n.col_offset,
+                context=qual,
+                message=(f"`{path}` is read after being donated to jitted "
+                         f"`{jit_name}`: the buffer was handed to XLA -- "
+                         f"rebind it from the call result first")))
+            return
+
+    # loop check: donation each iteration needs a rebind inside the loop
+    loop = _enclosing(parents, call, (ast.For, ast.While, ast.AsyncFor))
+    if loop is not None and path not in _binding_paths(loop):
+        findings.append(Finding(
+            rule=RULE, path=rel, line=op.lineno, col=op.col_offset,
+            context=qual,
+            message=(f"`{path}` is donated to jitted `{jit_name}` inside a "
+                     f"loop but never rebound in the loop body: the second "
+                     f"iteration passes an already-donated buffer")))

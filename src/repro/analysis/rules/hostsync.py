@@ -1,0 +1,88 @@
+"""SL004 host-sync: no hidden device->host transfers in designated hot paths.
+
+A ``np.asarray(...)``, ``.item()``, or implicit ``bool()`` on a device array
+blocks until the device catches up -- one stray sync in the per-chunk
+StreamServer step or the fleet slab loop serializes the whole pipeline (the
+ROADMAP's resident_speedup regression was five of these per ingest round).
+
+Hot paths are *designated in source*: a ``# symlint: hot-path`` comment on
+(or directly under) a ``def`` line marks that function.  Inside it, values
+returned by jitted functions (shared jit registry) or ``jnp.``/``jax.lax.``
+calls are device-resident; flowing one into a concretization or a branch
+test is a finding unless the line carries ``# sync: ok`` -- the annotation
+is the documented, reviewed place where the transfer happens (ideally a
+single batched ``jax.device_get`` per step).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.astutil import dotted, iter_functions
+from repro.analysis.dataflow import TaintWalker
+from repro.analysis.engine import Finding, Project, SourceFile, register
+from repro.analysis.jaxinfo import jit_registry
+
+RULE = "SL004"
+HOT_PATH_MARKER = "symlint: hot-path"
+SYNC_OK_MARKER = "sync: ok"
+
+#: call prefixes whose results live on device
+_DEVICE_PREFIXES = ("jnp.", "jax.numpy.", "jax.lax.", "lax.")
+
+
+def _is_hot_path(sf: SourceFile, node: ast.AST) -> bool:
+    """Marker on the decorator/def lines or the first body line."""
+    first_body = node.body[0].lineno if getattr(node, "body", None) else \
+        node.lineno
+    start = min([node.lineno] + [d.lineno for d in
+                                 getattr(node, "decorator_list", [])])
+    return any(sf.has_marker(ln, HOT_PATH_MARKER)
+               for ln in range(start, first_body + 1))
+
+
+@register(
+    RULE, "host-sync",
+    "Functions marked `# symlint: hot-path` must not concretize or branch "
+    "on device values except on lines annotated `# sync: ok`.",
+)
+def check(project: Project) -> Iterable[Finding]:
+    registry = jit_registry(project)
+    findings: List[Finding] = []
+
+    def is_device_call(call: ast.Call) -> bool:
+        callee = dotted(call.func) or ""
+        if callee.startswith(_DEVICE_PREFIXES):
+            return True
+        bare = callee.split(".")[-1]
+        return bare in registry
+
+    for rel, sf in sorted(project.files.items()):
+        for qual, node in iter_functions(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _is_hot_path(sf, node):
+                continue
+
+            def on_sink(n: ast.AST, kind: str, detail: str,
+                        qual=qual, rel=rel, sf=sf) -> None:
+                line = n.lineno
+                if sf.has_marker(line, SYNC_OK_MARKER):
+                    return
+                if kind == "branch":
+                    msg = (f"{detail} tests a device value in hot path "
+                           f"`{qual}`: the implicit bool() blocks on the "
+                           f"device -- hoist one batched `jax.device_get` "
+                           f"(annotated `# sync: ok`) and branch on the "
+                           f"host copy")
+                else:
+                    msg = (f"{detail} on a device value in hot path "
+                           f"`{qual}`: hidden device->host sync -- batch "
+                           f"transfers into one `jax.device_get` per step "
+                           f"and annotate it `# sync: ok`")
+                findings.append(Finding(
+                    rule=RULE, path=rel, line=line, col=n.col_offset,
+                    message=msg, context=qual))
+
+            TaintWalker((), is_device_call, on_sink).walk(node.body)
+    return findings

@@ -1,0 +1,206 @@
+"""SL002 retrace-hazard: tracer misuse that forces recompiles (or crashes).
+
+The resident-service regression tracked in ROADMAP ("resident_speedup 0.68x")
+came from exactly this class of bug: code inside a jitted function treating a
+tracer like a concrete value, or a call site feeding a static argument a
+value that changes every call.  Four checks, all scoped by the shared jit
+registry:
+
+  (a) **branch on a traced argument** -- ``if``/``while``/ternary/``assert``
+      whose test depends on a traced (non-static) parameter inside a jitted
+      body.  Branching on *static* parameters is fine and idiomatic
+      (``if first:`` in the SymED chunk kernels); ``x is None`` checks are
+      exempt (None-ness is resolved at trace time, intentionally).
+  (b) **concretization of a tracer** -- ``float()``/``int()``/``bool()``/
+      ``.item()``/``.tolist()``/``np.asarray()`` applied to a value derived
+      from a traced parameter inside a jitted body.
+  (c) **non-static closure capture** -- a jitted ``def`` nested inside
+      another function reads a name from the enclosing function's scope;
+      the capture is baked into the trace as a constant and silently goes
+      stale (or retraces) when the enclosing value changes.
+  (d) **loop-varying static operand** -- a call to a jitted function where a
+      static argument's expression uses a name rebound inside the enclosing
+      loop: every distinct value is a fresh trace.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis.astutil import dotted, iter_functions, parent_map
+from repro.analysis.dataflow import TaintWalker, assigned_names
+from repro.analysis.engine import Finding, Project, register
+from repro.analysis.jaxinfo import JitSpec, jit_registry
+
+RULE = "SL002"
+
+
+def _is_none_check(test: ast.expr) -> bool:
+    return (isinstance(test, ast.Compare)
+            and len(test.ops) == 1
+            and isinstance(test.ops[0], (ast.Is, ast.IsNot))
+            and isinstance(test.comparators[0], ast.Constant)
+            and test.comparators[0].value is None)
+
+
+def _body_checks(spec: JitSpec, findings: List[Finding]) -> None:
+    """(a) + (b): taint traced params, flag branches and concretizations."""
+    node = spec.func_node
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+        return
+    traced = spec.traced_params
+    if not traced:
+        return
+
+    def on_sink(n: ast.AST, kind: str, detail: str) -> None:
+        if kind == "branch":
+            test = getattr(n, "test", None)
+            if test is not None and _is_none_check(test):
+                return
+            msg = (f"{detail} on a traced argument inside jitted "
+                   f"`{spec.qualname}`: each concrete value forces a "
+                   f"retrace -- use `jnp.where`/`lax.cond`, or declare the "
+                   f"argument static")
+        else:
+            msg = (f"{detail} applied to a traced value inside jitted "
+                   f"`{spec.qualname}`: tracers have no concrete value -- "
+                   f"this raises at trace time or silently constant-folds")
+        findings.append(Finding(
+            rule=RULE, path=spec.relpath, line=n.lineno,
+            col=n.col_offset, message=msg, context=spec.qualname))
+
+    body = node.body if not isinstance(node, ast.Lambda) else None
+    walker = TaintWalker(traced, lambda c: False, on_sink)
+    if body is not None:
+        walker.walk(body)
+    else:
+        walker._scan_expr(node.body)
+
+
+def _closure_checks(project: Project, specs: List[JitSpec],
+                    findings: List[Finding]) -> None:
+    """(c): jitted defs nested in a function that read enclosing locals."""
+    for spec in specs:
+        node = spec.func_node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        sf = project.files.get(spec.relpath)
+        if sf is None:
+            continue
+        parents = parent_map(sf.tree)
+        enclosing = None
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                enclosing = cur
+                break
+            cur = parents.get(cur)
+        if enclosing is None:
+            continue  # module-level jit: module globals are fine
+
+        enclosing_locals = assigned_names(enclosing)
+        enclosing_locals.update(
+            a.arg for a in enclosing.args.args + enclosing.args.kwonlyargs)
+        own = set(spec.params) | assigned_names(node)
+        own.update(n.name for n in ast.walk(node)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)))
+        declared_static: Set[str] = set(spec.static_argnames)
+
+        reported: Set[str] = set()
+        for n in ast.walk(node):
+            if not (isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)):
+                continue
+            name = n.id
+            if (name in own or name in declared_static
+                    or name in reported
+                    or name not in enclosing_locals):
+                continue
+            reported.add(name)
+            findings.append(Finding(
+                rule=RULE, path=spec.relpath, line=n.lineno,
+                col=n.col_offset, context=spec.qualname,
+                message=(f"jitted `{spec.qualname}` closes over "
+                         f"`{name}` from enclosing "
+                         f"`{enclosing.name}`: the capture is traced once "
+                         f"and goes stale (or retraces) when it changes -- "
+                         f"pass it as an argument")))
+
+
+def _call_site_checks(project: Project, findings: List[Finding]) -> None:
+    """(d): static operands of jit calls that vary per loop iteration."""
+    registry = jit_registry(project)
+    for rel, sf in sorted(project.files.items()):
+        parents = parent_map(sf.tree)
+        ctx = {n: q for q, n in iter_functions(sf.tree)}
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted(node.func)
+            if callee is None:
+                continue
+            specs = registry.get(callee.split(".")[-1])
+            if not specs:
+                continue
+            # names rebound by the nearest enclosing loop
+            loop = parents.get(node)
+            while loop is not None and not isinstance(
+                    loop, (ast.For, ast.While, ast.AsyncFor)):
+                loop = parents.get(loop)
+            if loop is None:
+                continue
+            loop_names = assigned_names(loop)
+            for spec in specs:
+                for operand, pname in _static_operands(node, spec):
+                    varying = sorted(
+                        n.id for n in ast.walk(operand)
+                        if isinstance(n, ast.Name) and n.id in loop_names)
+                    if not varying:
+                        continue
+                    qual = ""
+                    cur = parents.get(node)
+                    while cur is not None:
+                        if cur in ctx:
+                            qual = ctx[cur]
+                            break
+                        cur = parents.get(cur)
+                    findings.append(Finding(
+                        rule=RULE, path=rel, line=operand.lineno,
+                        col=operand.col_offset, context=qual,
+                        message=(f"static argument `{pname}` of jitted "
+                                 f"`{spec.name}` built from loop-varying "
+                                 f"`{', '.join(varying)}`: every distinct "
+                                 f"value compiles a fresh trace")))
+
+
+def _static_operands(call: ast.Call, spec: JitSpec):
+    """Yield ``(operand_expr, param_name)`` for the call's static slots."""
+    static_names = set(spec.static_argnames)
+    for i in spec.static_argnums:
+        if i < len(spec.params):
+            static_names.add(spec.params[i])
+    for i, arg in enumerate(call.args):
+        if i in spec.static_argnums or (
+                i < len(spec.params) and spec.params[i] in static_names):
+            pname = spec.params[i] if i < len(spec.params) else f"#{i}"
+            yield arg, pname
+    for kw in call.keywords:
+        if kw.arg is not None and kw.arg in static_names:
+            yield kw.value, kw.arg
+
+
+@register(
+    RULE, "retrace-hazard",
+    "Inside jitted code: no Python branches or concretizations on traced "
+    "values, no enclosing-scope captures; at call sites: static operands "
+    "must not vary per loop iteration.",
+)
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    registry = jit_registry(project)
+    all_specs = [s for specs in registry.values() for s in specs]
+    for spec in all_specs:
+        _body_checks(spec, findings)
+    _closure_checks(project, all_specs, findings)
+    _call_site_checks(project, findings)
+    return findings

@@ -31,9 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.utils.jax_compat import MemorySpace, tpu_compiler_params
+from repro.utils.jax_compat import VMEM, MemorySpace, tpu_compiler_params
 
 __all__ = ["ewma_scan_pallas", "CHUNK"]
 
@@ -143,8 +142,8 @@ def ewma_scan_pallas(
             jax.ShapeDtypeStruct((bp, tp), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((bb,), jnp.float32),
-            pltpu.VMEM((bb,), jnp.float32),
+            VMEM((bb,), jnp.float32),
+            VMEM((bb,), jnp.float32),
         ],
         # batch tiles parallel, time blocks sequential (carry in scratch)
         compiler_params=tpu_compiler_params("parallel", "arbitrary"),

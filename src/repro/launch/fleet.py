@@ -146,7 +146,7 @@ def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
 
 
 def _encode_slab(slab, keys, cfg: SymEDConfig, chunk_len, digitize_every_k,
-                 reconstruct):
+                 reconstruct):  # symlint: hot-path
     """Per-shard body: vmapped SymED over a local (b, T) sub-slab.
 
     Returns ``(out, wire_out)``: ``wire_out`` (b,) is the outbound

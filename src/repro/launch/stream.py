@@ -296,6 +296,10 @@ class StreamServer:
     def __contains__(self, stream_id: str) -> bool:
         return stream_id in self._sessions
 
+    def session_ids(self) -> List[str]:
+        """Open session ids, in open order (monitoring surface)."""
+        return list(self._sessions)
+
     def session_stats(self, stream_id: str) -> dict:
         """Live bookkeeping for one open session (monitoring surface)."""
         sess = self._sessions[stream_id]
@@ -344,7 +348,7 @@ class StreamServer:
         """Feed one ragged arrival; returns its symbol-delta frame."""
         return self.ingest_many({stream_id: window})[stream_id]
 
-    def ingest_many(self, arrivals: Dict[str, object]) -> Dict[str, dict]:
+    def ingest_many(self, arrivals: Dict[str, object]) -> Dict[str, dict]:  # symlint: hot-path
         """Feed concurrent arrivals through one batched step per round.
 
         ``arrivals`` maps open stream ids to 1-D float windows of any
@@ -390,11 +394,10 @@ class StreamServer:
             self.totals["steps"] += 1
             self._clock += 1
             d = info["symbol_delta"]
-            labels = np.asarray(d["labels"])
-            endpoints = np.asarray(d["endpoints"])
-            n_new = np.asarray(d["n_new"])
-            emitted = np.asarray(d["emitted"])
-            t_seen = np.asarray(info["t_seen"])
+            # one blocking transfer per round, not one per output leaf
+            labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
+                (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
+                 info["t_seen"]))
             for sid, part in active:
                 sess = self._sessions[sid]
                 self._account_delta(
@@ -413,7 +416,7 @@ class StreamServer:
                     sess.dtw = self._monitor_dtw(sess)
         return _finalize_deltas(deltas)
 
-    def ingest_pieces_many(self, arrivals: Dict[str, dict]) -> Dict[str, dict]:
+    def ingest_pieces_many(self, arrivals: Dict[str, dict]) -> Dict[str, dict]:  # symlint: hot-path
         """Compressed-in counterpart of ``ingest_many``.
 
         Each arrival carries pieces the *sender's* compressor finished
@@ -476,11 +479,10 @@ class StreamServer:
             self.totals["steps"] += 1
             self._clock += 1
             d = info["symbol_delta"]
-            labels = np.asarray(d["labels"])
-            endpoints = np.asarray(d["endpoints"])
-            n_new = np.asarray(d["n_new"])
-            emitted = np.asarray(d["emitted"])
-            t_seen = np.asarray(info["t_seen"])
+            # one blocking transfer per round, not one per output leaf
+            labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
+                (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
+                 info["t_seen"]))
             for sid, n_in in active:
                 sess = self._sessions[sid]
                 self._account_delta(

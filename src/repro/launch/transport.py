@@ -182,6 +182,11 @@ class FrameDecoder:
             frames.append(Frame(ftype, sid, body[2 + sid_len:]))
 
 
+def decode_open(payload: bytes) -> Tuple[int, int]:
+    mode, seed = struct.unpack_from("!BI", payload)
+    return mode, seed
+
+
 def decode_data_raw(payload: bytes) -> np.ndarray:
     (n,) = struct.unpack_from("!I", payload)
     return np.frombuffer(payload, ">f4", count=n, offset=4).astype(np.float32)
@@ -509,7 +514,7 @@ class TransportServer:
 
         sid = frame.sid
         if frame.type == OPEN:
-            mode, seed = struct.unpack_from("!BI", frame.payload)
+            mode, seed = decode_open(frame.payload)
             if sid in self._wire or sid in self.server:
                 self._reply(conn, encode_error(sid, "already open"))
                 return
@@ -566,7 +571,7 @@ class TransportServer:
         else:
             self._reply(conn, encode_error(sid, "unexpected frame type"))
 
-    def _flush(self, raw_batch, pieces_batch, closes) -> None:
+    def _flush(self, raw_batch, pieces_batch, closes) -> None:  # symlint: hot-path
         if raw_batch:
             arrivals = {sid: np.concatenate(ws) for sid, ws in
                         raw_batch.items() if sid in self.server}

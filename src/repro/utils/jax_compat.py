@@ -12,16 +12,28 @@ and ``shard_map`` lives in ``jax.experimental`` with a ``check_rep`` flag.
 Everything is resolved by feature detection (never version string parsing),
 so the same source runs on both sides of each rename:
 
-=====================  ==========================  =========================
-concept                old name (<= 0.4.x)         new name
-=====================  ==========================  =========================
-TPU memory spaces      ``pltpu.TPUMemorySpace``    ``pltpu.MemorySpace``
-compiler params        ``pltpu.TPUCompilerParams`` ``pltpu.CompilerParams``
-dimension semantics    ``('parallel', ...)`` strs  ``GridDimensionSemantics``
-mesh axis types        (no kwarg)                  ``axis_types=AxisType...``
-shard_map              ``jax.experimental...``     ``jax.shard_map``
-replication check      ``check_rep=``              ``check_vma=``
-=====================  ==========================  =========================
+This table is also the single source of truth for the ``SL001`` lint
+(``python -m repro.analysis``): every ````-quoted name or ``kwarg=`` token
+between the table rules below is banned outside this module.  Adding a shim
+here (with its table row) is how the banned list grows.
+
+======================  ==============================  ========================
+concept                 version-sensitive spelling      routed through
+======================  ==============================  ========================
+TPU memory spaces       ``pltpu.TPUMemorySpace``        ``MemorySpace``
+                        ``pltpu.MemorySpace``           ``MemorySpace``
+VMEM scratch shapes     ``pltpu.VMEM``                  ``VMEM``
+compiler params         ``pltpu.TPUCompilerParams``     ``CompilerParams``
+                        ``pltpu.CompilerParams``        ``CompilerParams``
+dimension semantics     ``dimension_semantics=``        ``tpu_compiler_params``
+                        ``GridDimensionSemantics``      ``dimension_semantics``
+mesh construction       ``jax.make_mesh``               ``make_mesh``
+mesh axis types         ``axis_types=``                 ``make_mesh``
+shard_map               ``jax.experimental.shard_map``  ``shard_map``
+                        ``jax.shard_map``               ``shard_map``
+replication check       ``check_rep=``                  ``shard_map``
+                        ``check_vma=``                  ``shard_map``
+======================  ==============================  ========================
 """
 from __future__ import annotations
 
@@ -33,6 +45,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "MemorySpace",
+    "VMEM",
     "CompilerParams",
     "dimension_semantics",
     "tpu_compiler_params",
@@ -45,6 +58,13 @@ __all__ = [
 # pltpu.TPUMemorySpace (enum: ANY/SMEM/VMEM/CMEM/SEMAPHORE) was renamed to
 # pltpu.MemorySpace; members are identical.
 MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+# pltpu.VMEM (the scratch-shape constructor) predates the enum rename and may
+# disappear in favor of the enum member; prefer the module constant while it
+# exists, fall back to the enum.
+VMEM = getattr(pltpu, "VMEM", None)
+if VMEM is None:  # pragma: no cover -- future-API path
+    VMEM = MemorySpace.VMEM
 
 # --- Pallas TPU compiler params ---------------------------------------------
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

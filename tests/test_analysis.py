@@ -1,0 +1,483 @@
+"""symlint (``repro.analysis``): rule fixtures, baseline/suppression
+mechanics, the SL005 mutation battery, and the repo-wide smoke gate.
+
+Every fixture project is built in ``tmp_path`` and analyzed through the real
+engine (``load_project`` + ``analyze``), so the tests exercise the same
+suppression/baseline partitioning the CLI uses.  The mutation test copies
+the *actual* transport/receiver codec files, flips one byte of one struct
+format string, and asserts SL005 catches the one-sided edit -- that is the
+property the rule exists for.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.cli import find_root, main
+from repro.analysis.engine import Baseline, analyze, load_project
+
+REPO_ROOT = find_root(Path(__file__).resolve().parent)
+
+
+def run(tmp_path, sources, rules, baseline=None):
+    """Write ``{relpath: source}`` under tmp_path and analyze it."""
+    for rel, text in sources.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    project = load_project(tmp_path, [tmp_path])
+    return analyze(project, rules, baseline)
+
+
+def rules_of(result):
+    return [f.rule for f in result.findings]
+
+
+# --------------------------------------------------------------- SL001 compat
+
+
+SL001_POS = """\
+import jax
+from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.shard_map import shard_map
+
+def kernel(block):
+    return pltpu.TPUMemorySpace.ANY
+
+def grid(params):
+    return params(dimension_semantics=("parallel",))
+
+def mesh():
+    return jax.make_mesh((1,), ("data",))
+"""
+
+SL001_NEG = """\
+from repro.utils.jax_compat import MemorySpace, VMEM, tpu_compiler_params
+
+def kernel(block):
+    return MemorySpace.ANY, VMEM((8,), float)
+"""
+
+
+class TestSL001:
+    def test_positive(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL001_POS}, ["SL001"])
+        msgs = [f.message for f in result.findings]
+        assert len(result.findings) == 4
+        assert any("jax.experimental.shard_map" in m for m in msgs)
+        assert any("pltpu.TPUMemorySpace" in m for m in msgs)
+        assert any("dimension_semantics" in m for m in msgs)
+        assert any("jax.make_mesh" in m for m in msgs)
+
+    def test_negative(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL001_NEG}, ["SL001"])
+        assert result.findings == []
+
+    def test_suppressed(self, tmp_path):
+        src = SL001_POS.replace(
+            "return pltpu.TPUMemorySpace.ANY",
+            "return pltpu.TPUMemorySpace.ANY  # symlint: disable=SL001")
+        result = run(tmp_path, {"mod.py": src}, ["SL001"])
+        assert len(result.findings) == 3
+        assert len(result.suppressed) == 1
+
+    def test_baselined(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL001_POS}, ["SL001"])
+        bpath = tmp_path / "baseline.json"
+        Baseline.write(bpath, result.findings, {})
+        baseline = Baseline(bpath)
+        again = run(tmp_path, {"mod.py": SL001_POS}, ["SL001"], baseline)
+        assert again.findings == []
+        assert len(again.baselined) == 4
+        assert again.exit_code == 0
+
+    def test_compat_module_itself_exempt(self, tmp_path):
+        result = run(
+            tmp_path, {"utils/jax_compat.py": SL001_POS}, ["SL001"])
+        assert result.findings == []
+
+    def test_docstring_table_drives_banned_list(self, tmp_path):
+        # a fixture jax_compat whose table bans a made-up name
+        compat = (
+            '"""Shims.\n\n'
+            "====  ====\n"
+            "a     b\n"
+            "====  ====\n"
+            "x     ``pltpu.MadeUpName``\n"
+            "====  ====\n"
+            '"""\n'
+        )
+        user = (
+            "from jax.experimental.pallas import tpu as pltpu\n"
+            "def f():\n"
+            "    return pltpu.MadeUpName\n"
+        )
+        result = run(tmp_path, {"utils/jax_compat.py": compat,
+                                "mod.py": user}, ["SL001"])
+        assert [f.rule for f in result.findings] == ["SL001"]
+        assert "MadeUpName" in result.findings[0].message
+
+
+# -------------------------------------------------------------- SL002 retrace
+
+
+SL002_BRANCH = """\
+import jax
+
+@jax.jit
+def f(x, y):
+    if x > 0:
+        return y
+    return -y
+"""
+
+SL002_STATIC_OK = """\
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("first",))
+def f(x, *, first):
+    if first:
+        return x * 2
+    return x
+"""
+
+SL002_CONCRETIZE = """\
+import jax
+
+@jax.jit
+def f(x):
+    return float(x) + 1.0
+"""
+
+SL002_CLOSURE = """\
+import jax
+
+def outer(scale):
+    @jax.jit
+    def inner(x):
+        return x * scale
+    return inner
+"""
+
+SL002_LOOP_STATIC = """\
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def f(x, *, k):
+    return x * k
+
+def driver(x):
+    out = []
+    for i in range(8):
+        out.append(f(x, k=i))
+    return out
+"""
+
+
+class TestSL002:
+    def test_branch_on_traced(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL002_BRANCH}, ["SL002"])
+        assert rules_of(result) == ["SL002"]
+        assert "`if` statement" in result.findings[0].message
+
+    def test_static_branch_ok(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL002_STATIC_OK}, ["SL002"])
+        assert result.findings == []
+
+    def test_none_check_ok(self, tmp_path):
+        src = SL002_BRANCH.replace("if x > 0:", "if y is None:")
+        result = run(tmp_path, {"mod.py": src}, ["SL002"])
+        assert result.findings == []
+
+    def test_concretize_traced(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL002_CONCRETIZE}, ["SL002"])
+        assert rules_of(result) == ["SL002"]
+        assert "float()" in result.findings[0].message
+
+    def test_closure_capture(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL002_CLOSURE}, ["SL002"])
+        assert rules_of(result) == ["SL002"]
+        assert "`scale`" in result.findings[0].message
+
+    def test_loop_varying_static(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL002_LOOP_STATIC}, ["SL002"])
+        assert rules_of(result) == ["SL002"]
+        assert "loop-varying" in result.findings[0].message
+
+    def test_suppressed(self, tmp_path):
+        src = SL002_BRANCH.replace(
+            "if x > 0:", "if x > 0:  # symlint: disable=SL002")
+        result = run(tmp_path, {"mod.py": src}, ["SL002"])
+        assert result.findings == []
+        assert len(result.suppressed) == 1
+
+
+# ------------------------------------------------------------- SL003 donation
+
+
+SL003_REUSE = """\
+import jax
+
+@jax.jit
+def step(state, x):
+    return state + x
+
+step = jax.jit(step, donate_argnums=(0,))
+
+def driver(state, x):
+    out = step(state, x)
+    return state + out
+"""
+
+SL003_REBOUND = """\
+import jax
+
+def _step(state, x):
+    return state + x
+
+step = jax.jit(_step, donate_argnums=(0,))
+
+def driver(state, xs):
+    for x in xs:
+        state = step(state, x)
+    return state
+"""
+
+SL003_LOOP_NO_REBIND = """\
+import jax
+
+def _step(state, x):
+    return state + x
+
+step = jax.jit(_step, donate_argnums=(0,))
+
+def driver(state, xs):
+    out = []
+    for x in xs:
+        out.append(step(state, x))
+    return out
+"""
+
+
+class TestSL003:
+    def test_read_after_donate(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL003_REUSE}, ["SL003"])
+        assert "SL003" in rules_of(result)
+        assert "`state`" in result.findings[0].message
+
+    def test_rebound_ok(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL003_REBOUND}, ["SL003"])
+        assert result.findings == []
+
+    def test_loop_without_rebind(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL003_LOOP_NO_REBIND}, ["SL003"])
+        assert "SL003" in rules_of(result)
+        assert "loop" in result.findings[0].message
+
+    def test_suppressed(self, tmp_path):
+        src = SL003_REUSE.replace(
+            "return state + out",
+            "return state + out  # symlint: disable=SL003")
+        result = run(tmp_path, {"mod.py": src}, ["SL003"])
+        assert result.findings == []
+        assert len(result.suppressed) == 1
+
+
+# ------------------------------------------------------------- SL004 hostsync
+
+
+SL004_SYNC = """\
+import numpy as np
+import jax.numpy as jnp
+
+def hot(x):  # symlint: hot-path
+    y = jnp.cumsum(x)
+    return np.asarray(y)
+"""
+
+SL004_ANNOTATED = """\
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+def hot(x):  # symlint: hot-path
+    y = jnp.cumsum(x)
+    return jax.device_get(y)  # sync: ok
+"""
+
+SL004_BRANCH = """\
+import jax.numpy as jnp
+
+def hot(x):  # symlint: hot-path
+    y = jnp.any(x > 0)
+    if y:
+        return 1
+    return 0
+"""
+
+
+class TestSL004:
+    def test_sync_in_hot_path(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL004_SYNC}, ["SL004"])
+        assert rules_of(result) == ["SL004"]
+        assert "np.asarray()" in result.findings[0].message
+
+    def test_annotated_sync_ok(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL004_ANNOTATED}, ["SL004"])
+        assert result.findings == []
+
+    def test_branch_on_device_value(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL004_BRANCH}, ["SL004"])
+        assert rules_of(result) == ["SL004"]
+        assert "blocks on the device" in result.findings[0].message
+
+    def test_unmarked_function_ignored(self, tmp_path):
+        src = SL004_SYNC.replace("def hot(x):  # symlint: hot-path",
+                                 "def cold(x):")
+        result = run(tmp_path, {"mod.py": src}, ["SL004"])
+        assert result.findings == []
+
+    def test_suppressed(self, tmp_path):
+        src = SL004_SYNC.replace(
+            "return np.asarray(y)",
+            "return np.asarray(y)  # symlint: disable=SL004")
+        result = run(tmp_path, {"mod.py": src}, ["SL004"])
+        assert result.findings == []
+        assert len(result.suppressed) == 1
+
+
+# ----------------------------------------------------------------- SL005 wire
+
+
+CODEC_FILES = ("src/repro/launch/transport.py", "src/repro/core/receiver.py")
+
+
+def codec_sources():
+    return {rel: (REPO_ROOT / rel).read_text() for rel in CODEC_FILES}
+
+
+class TestSL005:
+    def test_real_codecs_consistent(self, tmp_path):
+        result = run(tmp_path, codec_sources(), ["SL005"])
+        assert result.findings == []
+
+    @pytest.mark.parametrize("before,after", [
+        ('"!IIB"', '"!IBB"'),     # encode/decode_closed header
+        ('"!fII"', '"!fIH"'),     # pieces DATA header
+        ('("endpoint", ">f4")', '("endpoint", ">f8")'),  # piece record
+    ])
+    def test_mutation_caught(self, tmp_path, before, after):
+        sources = codec_sources()
+        mutated = False
+        for rel in list(sources):
+            if before in sources[rel]:
+                # flip the *first* occurrence: a one-sided edit
+                sources[rel] = sources[rel].replace(before, after, 1)
+                mutated = True
+                break
+        assert mutated, f"pattern {before!r} not found in codec files"
+        result = run(tmp_path, sources, ["SL005"])
+        assert any(f.rule == "SL005" for f in result.findings), (
+            f"one-sided {before} -> {after} edit not caught")
+
+    def test_unpaired_codec_flagged(self, tmp_path):
+        src = (
+            "import struct\n"
+            "def encode_open(sid, mode, seed):\n"
+            "    return struct.pack('!BI', mode, seed)\n"
+        )
+        result = run(tmp_path, {"mod.py": src}, ["SL005"])
+        assert any("decode_open" in f.message for f in result.findings)
+
+    def test_offset_mismatch(self, tmp_path):
+        src = (
+            "import struct\n"
+            "def encode_close(t, flag):\n"
+            "    return struct.pack('!IB', t, flag) + struct.pack('!f', 0.5)\n"
+            "def decode_close(buf):\n"
+            "    t, flag = struct.unpack_from('!IB', buf)\n"
+            "    tail = struct.unpack_from('!f', buf, 6)[0]\n"
+            "    return t, flag, tail\n"
+        )
+        result = run(tmp_path, {"mod.py": src}, ["SL005"])
+        assert any("offset 6" in f.message for f in result.findings)
+
+    def test_constant_contract(self, tmp_path):
+        src = (
+            "import numpy as np\n"
+            "DELTA_SYMBOL_BYTES = 6.0\n"
+            '_DELTA_REC = np.dtype([("label", "u1"), ("endpoint", ">f4")])\n'
+        )
+        result = run(tmp_path, {"mod.py": src}, ["SL005"])
+        assert any("DELTA_SYMBOL_BYTES" in f.message
+                   for f in result.findings)
+
+
+# ------------------------------------------------------- engine + repo gates
+
+
+class TestEngine:
+    def test_stale_baseline_entry_fails(self, tmp_path):
+        result = run(tmp_path, {"mod.py": SL001_POS}, ["SL001"])
+        bpath = tmp_path / "baseline.json"
+        Baseline.write(bpath, result.findings, {})
+        clean = run(tmp_path, {"clean.py": SL001_NEG}, ["SL001"],
+                    Baseline(bpath))
+        # the fixture with the violations is still in the sweep, so entries
+        # are live; now analyze a sweep where they no longer match
+        project = load_project(tmp_path / "sub", [])
+        from repro.analysis.engine import analyze as analyze_fn
+        result2 = analyze_fn(project, ["SL001"], Baseline(bpath))
+        assert result2.stale_baseline
+        assert result2.exit_code == 1
+        assert clean.exit_code == 0  # live entries are not stale
+
+    def test_parse_error_reported_not_raised(self, tmp_path):
+        result = run(tmp_path, {"bad.py": "def broken(:\n"}, ["SL001"])
+        assert result.parse_errors
+        assert result.exit_code == 1
+
+    def test_bare_disable_suppresses_all_rules(self, tmp_path):
+        src = SL002_BRANCH.replace(
+            "if x > 0:", "if x > 0:  # symlint: disable")
+        result = run(tmp_path, {"mod.py": src}, ["SL002"])
+        assert result.findings == []
+        assert len(result.suppressed) == 1
+
+    def test_fingerprint_survives_line_moves(self, tmp_path):
+        r1 = run(tmp_path, {"mod.py": SL002_BRANCH}, ["SL002"])
+        shifted = "# a new leading comment\n\n" + SL002_BRANCH
+        r2 = run(tmp_path, {"mod.py": shifted}, ["SL002"])
+        assert (r1.findings[0].fingerprint
+                == r2.findings[0].fingerprint)
+        assert r1.findings[0].line != r2.findings[0].line
+
+
+class TestRepoSmoke:
+    def test_head_is_clean(self):
+        """The committed tree passes all five rules against its baseline."""
+        paths = [REPO_ROOT / d for d in ("src", "examples", "benchmarks")
+                 if (REPO_ROOT / d).is_dir()]
+        project = load_project(REPO_ROOT, paths)
+        baseline = Baseline(REPO_ROOT / ".symlint-baseline.json")
+        result = analyze(project, None, baseline)
+        assert result.parse_errors == []
+        assert result.findings == [], [f.to_json() for f in result.findings]
+        assert result.stale_baseline == []
+        assert result.exit_code == 0
+
+    def test_cli_list_rules(self, capsys):
+        assert main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rid in ("SL001", "SL002", "SL003", "SL004", "SL005"):
+            assert rid in out
+
+    def test_cli_github_format_on_fixture(self, tmp_path, capsys, monkeypatch):
+        (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+        (tmp_path / "mod.py").write_text(SL002_BRANCH)
+        monkeypatch.chdir(tmp_path)
+        code = main(["mod.py", "--format=github", "--no-baseline"])
+        out = capsys.readouterr().out
+        assert code == 1
+        assert "::error file=mod.py" in out
