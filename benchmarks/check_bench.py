@@ -1,0 +1,109 @@
+"""Bench regression gate for the resident stream service.
+
+Two checks, both sized for the CI ``bench-artifacts`` job:
+
+1. **resident_speedup diff** -- compares the freshly generated
+   ``BENCH_fleet.json`` against the committed one (read from ``git show
+   HEAD:BENCH_fleet.json`` by default, so the fresh run may overwrite the
+   worktree copy in place) and fails if ``resident_speedup`` dropped by
+   more than ``--rel-tol`` (CI-noise allowance).  The committed artifact is
+   the perf trajectory; this stops a "resident tick got slower than the
+   slab rerun again" regression from merging silently.
+2. **compiled-program cache flatness** -- spins up a ladder-pre-traced
+   autoscaled ``StreamServer``, drives a grow/shrink/grow cycle, and fails
+   if the donated table step compiled *anything* new: the serving loop's
+   retrace-free contract, asserted against the live jit cache rather than
+   inferred from timings.
+
+    PYTHONPATH=src python -m benchmarks.check_bench --fresh BENCH_fleet.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def load_baseline(spec: str):
+    """``@HEAD`` reads the committed artifact; anything else is a path."""
+    if spec == "@HEAD":
+        proc = subprocess.run(
+            ["git", "show", "HEAD:BENCH_fleet.json"],
+            capture_output=True, text=True)
+        if proc.returncode != 0:
+            return None
+        return json.loads(proc.stdout)
+    with open(spec) as f:
+        return json.load(f)
+
+
+def check_speedup(fresh: dict, base: dict, rel_tol: float) -> bool:
+    f = float(fresh["summary"]["stream_service"]["resident_speedup"])
+    b = float(base["summary"]["stream_service"]["resident_speedup"])
+    floor = b * (1.0 - rel_tol)
+    ok = f >= floor
+    print(f"resident_speedup: fresh={f:.3f} committed={b:.3f} "
+          f"floor={floor:.3f} -> {'ok' if ok else 'REGRESSION'}")
+    return ok
+
+
+def check_cache_flat() -> bool:
+    import numpy as np
+
+    from repro.core.symed import SymEDConfig
+    from repro.launch.stream import StreamServer, _table_step
+
+    cfg = SymEDConfig(tol=0.5, alpha=0.02, scl=1.0, k_min=3, k_max=8,
+                      len_max=32, n_max=64, lloyd_iters=5)
+    srv = StreamServer(cfg, max_sessions=4, window_cap=32, autoscale=True,
+                       min_slots=1, shrink_patience=1, pretrace=True)
+    base = _table_step._cache_size()
+    rng = np.random.default_rng(0)
+    for cycle in range(2):  # grow 1->2->4, drain to 1, grow again
+        for i in range(3):
+            sid = f"c{cycle}s{i}"
+            srv.open(sid)
+            srv.ingest(sid, rng.normal(size=32).astype(np.float32))
+        for i in range(3):
+            srv.close(f"c{cycle}s{i}")
+    now = _table_step._cache_size()
+    grows, shrinks = srv.totals["grows"], srv.totals["shrinks"]
+    ok = now == base and grows >= 3 and shrinks >= 3
+    print(f"compiled cache entries: {base} -> {now} across "
+          f"grows={grows} shrinks={shrinks} -> "
+          f"{'ok (flat)' if ok else 'FAIL (traced during serving)'}")
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--fresh", default="BENCH_fleet.json",
+                    help="freshly generated artifact to gate")
+    ap.add_argument("--baseline", default="@HEAD",
+                    help="committed artifact (@HEAD: git show HEAD:...)")
+    ap.add_argument("--rel-tol", type=float, default=0.25,
+                    help="allowed fractional resident_speedup drop (sized "
+                         "for shared-runner timing noise: the gate catches "
+                         "structural regressions like the 0.68x inversion, "
+                         "not percent-level jitter)")
+    ap.add_argument("--skip-cache-check", action="store_true",
+                    help="only diff the artifacts (no jax work)")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    base = load_baseline(args.baseline)
+    ok = True
+    if base is None:
+        print(f"no committed baseline ({args.baseline}); speedup gate "
+              "skipped")
+    else:
+        ok = check_speedup(fresh, base, args.rel_tol) and ok
+    if not args.skip_cache_check:
+        ok = check_cache_flat() and ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -216,6 +216,55 @@ def run(quick: bool = False) -> Tuple[List[tuple], dict]:
         "wire_out_bytes": server.totals["bytes_out"],
         "wire_in_ratio_pieces": pieces_rep["wire_in_ratio"],
     }
+
+    # resident-tick scaling: the same steady-state arrival tick at larger
+    # session counts (one donated table step regardless of fleet size), and
+    # a digitize-cadence sweep at the base count.  Off-cadence ticks digitize
+    # an *empty* span (the while-loop trip count is the span width, not
+    # n_max), so averaged over a cadence period k > 1 costs about the same
+    # digitize work as k=1 -- the sweep meters enough ticks to amortize the
+    # wider on-cadence spans against the no-op off-cadence ones.
+    def resident_tick_s(n_sessions: int, dk: int, length: int) -> float:
+        n_sessions = round_up(n_sessions)
+        slab = np.asarray(make_fleet(n_sessions, length, seed=3))
+        srv = StreamServer(cfg, max_sessions=n_sessions, window_cap=svc_win,
+                           digitize_every_k=dk)
+        ids = [f"r{i}" for i in range(n_sessions)]
+        for sid in ids:
+            srv.open(sid)
+
+        def tick(c):
+            srv.ingest_many({sid: slab[i, c: c + svc_win]
+                             for i, sid in enumerate(ids)})
+
+        tick(0)  # compiles the donated step; steady state is what we meter
+        t0 = time.perf_counter()
+        for c in range(svc_win, length, svc_win):
+            tick(c)
+        dt = ((time.perf_counter() - t0)
+              / max((length - svc_win) // svc_win, 1))
+        for sid in ids:
+            srv.close(sid)
+        return dt
+
+    scale = {}
+    for n_sessions in (8, 32, 64):
+        dt = resident_tick_s(n_sessions, 1, svc_len)
+        pts = round_up(n_sessions) * svc_win
+        rows.append((f"service_resident_tick_{round_up(n_sessions)}"
+                     f"x{svc_len}_w{svc_win}_scale", 1e6 * dt, pts / dt))
+        scale[f"sessions_{n_sessions}"] = {
+            "tick_ms": 1e3 * dt, "points_per_s": pts / dt}
+    cadence = {}
+    cad_len = svc_win * 8  # 7 metered ticks: full k=4 period amortized twice
+    for dk in (1, 2, 4):
+        dt = resident_tick_s(svc_streams, dk, cad_len)
+        pts = svc_streams * svc_win
+        rows.append((f"service_resident_tick_{svc_streams}x{cad_len}"
+                     f"_w{svc_win}_k{dk}", 1e6 * dt, pts / dt))
+        cadence[f"k_{dk}"] = {"tick_ms": 1e3 * dt, "points_per_s": pts / dt}
+    summary["stream_service"]["scale"] = scale
+    summary["stream_service"]["cadence"] = cadence
     return rows, summary
 
 

@@ -36,9 +36,12 @@ __all__ = [
     "digitizer_delta",
     "digitizer_init",
     "digitizer_step",
+    "digitizer_table_step",
     "digitize_pieces",
     "digitize_span",
+    "digitize_span_table",
     "masked_kmeans",
+    "masked_kmeans_table",
     "max_cluster_variance",
     "scale_coords",
 ]
@@ -107,13 +110,8 @@ def masked_kmeans(
 
     def lloyd(_, carry):
         centers, _ = carry
-        d = _pairwise_sq_dists(coords, centers)
-        d = jnp.where(center_active[None, :], d, _BIG)
-        labels = jnp.argmin(d, axis=1).astype(jnp.int32)
-        onehot = jax.nn.one_hot(labels, k_max, dtype=jnp.float32)
-        onehot = onehot * mask[:, None].astype(jnp.float32)
-        counts = jnp.sum(onehot, axis=0)                      # (k_max,)
-        sums = onehot.T @ coords                              # (k_max, 2)
+        labels, sums, counts = _lloyd_half_step(coords, mask, centers,
+                                                center_active)
         new_centers = jnp.where(
             counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centers
         )
@@ -123,6 +121,88 @@ def masked_kmeans(
         0, iters, lloyd, (c_init, jnp.zeros(coords.shape[0], jnp.int32))
     )
     return centers, labels
+
+
+def _lloyd_half_step(
+    coords: jax.Array,
+    mask: jax.Array,
+    centers: jax.Array,
+    center_active: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The assign half of one Lloyd iteration, single clustering problem.
+
+    Exactly the op sequence ``kernels.kmeans.kmeans_assign_pallas`` fuses:
+    masked pairwise distances (MXU expansion), argmin, and the per-cluster
+    (sum, count) statistics.  ``masked_kmeans`` consumes it per lane;
+    ``masked_kmeans_table`` either vmaps it (bitwise-identical reference) or
+    swaps in the Pallas kernel.
+
+    Returns ``(labels (n,), sums (k_max, 2), counts (k_max,))``.
+    """
+    k_max = centers.shape[0]
+    d = _pairwise_sq_dists(coords, centers)
+    d = jnp.where(center_active[None, :], d, _BIG)
+    labels = jnp.argmin(d, axis=1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(labels, k_max, dtype=jnp.float32)
+    onehot = onehot * mask[:, None].astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)                      # (k_max,)
+    sums = onehot.T @ coords                              # (k_max, 2)
+    return labels, sums, counts
+
+
+def masked_kmeans_table(
+    coords: jax.Array,
+    mask: jax.Array,
+    c_init: jax.Array,
+    k: jax.Array,
+    iters: int = 10,
+    *,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Slot-table batch of independent ``masked_kmeans`` problems.
+
+    Args:
+      coords: (S, n_max, 2) scaled piece coordinates per slot.
+      mask:   (S, n_max) valid pieces per slot.
+      c_init: (S, k_max, 2) initial centers.
+      k:      (S,) active center counts.
+      use_kernel: route the assign half-step through the fused Pallas
+        kernel (``kernels.ops.kmeans_assign``, one ``pallas_call`` over the
+        whole table) instead of ``jax.vmap(_lloyd_half_step)``.  The vmapped
+        path is bitwise-identical to per-slot ``masked_kmeans``; the kernel
+        path matches to float tolerance and zeroes labels of masked pieces
+        (parity tested in ``tests/test_kernels.py``), so CPU deployments
+        keep ``use_kernel=False``.
+
+    Returns ``(centers (S, k_max, 2), labels (S, n_max))``.
+    """
+    n_streams, n = coords.shape[0], coords.shape[1]
+    k_max = c_init.shape[1]
+    center_active = jnp.arange(k_max)[None, :] < k[:, None]   # (S, k_max)
+
+    if use_kernel:
+        from repro.kernels import ops as _kops  # deferred: avoids an import
+        # cycle (kernels.ref pulls in core modules at import time)
+
+        def half(centers):
+            return _kops.kmeans_assign(coords, mask, centers, center_active)
+    else:
+        def half(centers):
+            return jax.vmap(_lloyd_half_step)(coords, mask, centers,
+                                              center_active)
+
+    def lloyd(_, carry):
+        centers, _ = carry
+        labels, sums, counts = half(centers)
+        new_centers = jnp.where(
+            counts[..., None] > 0,
+            sums / jnp.maximum(counts[..., None], 1.0), centers
+        )
+        return new_centers, labels
+
+    return jax.lax.fori_loop(
+        0, iters, lloyd, (c_init, jnp.zeros((n_streams, n), jnp.int32))
+    )
 
 
 def _pairwise_sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
@@ -300,28 +380,243 @@ def digitize_span(
 
     Returns ``(state, symbols)`` -- ``symbols`` (n_max,) holds the symbol
     emitted when each span slot arrived (0 outside the span).
+
+    The loop is a ``lax.while_loop`` over a cursor ``j in [lo, hi)``: the
+    trip count is the number of pieces actually in the span, not ``n_max``.
+    The previous formulation scanned all ``n_max`` positions with a
+    ``lax.cond`` gate -- under ``jax.vmap`` (slot tables, fleet slabs) that
+    cond lowers to a select which *runs* the full k-means at every position
+    and discards the dead results, making every digitize pass cost
+    O(n_max * lloyd) regardless of how few pieces arrived (the
+    ``resident_speedup`` < 1 regression).  Per lane the executed
+    ``digitizer_step`` sequence is identical, so results stay bitwise-equal;
+    under vmap the batched while body is select-masked per lane by jax's
+    batching rule, preserving that contract.
     """
     n_max = lengths.shape[0]
     pieces = jnp.stack(
         [lengths.astype(jnp.float32), incs.astype(jnp.float32)], axis=-1
     )
 
-    def step(s, xs):
-        piece, idx = xs
-        live = (idx >= lo) & (idx < hi)
+    def cond(carry):
+        _, _, j = carry
+        return j < hi
 
-        def do(st):
-            return digitizer_step(
-                st, piece, tol=tol, scl=scl, k_min=k_min,
-                k_max_active=k_max_active, lloyd_iters=lloyd_iters,
-            )
+    def body(carry):
+        st, syms, j = carry
+        # dead lanes of a batched loop ride along past hi: clamp their read
+        jc = jnp.minimum(j, n_max - 1)
+        st2, sym = digitizer_step(
+            st, pieces[jc], tol=tol, scl=scl, k_min=k_min,
+            k_max_active=k_max_active, lloyd_iters=lloyd_iters,
+        )
+        return st2, syms.at[jc].set(sym), j + 1
 
-        def skip(st):
-            return st, jnp.zeros((), jnp.int32)
+    final, symbols, _ = jax.lax.while_loop(
+        cond, body,
+        (state, jnp.zeros((n_max,), jnp.int32), jnp.asarray(lo, jnp.int32)),
+    )
+    return final, symbols
 
-        return jax.lax.cond(live, do, skip, s)
 
-    return jax.lax.scan(step, state, (pieces, jnp.arange(n_max)))
+def _select_lanes(pred, new, old):
+    """Per-lane select over pytrees with an ``(S,)`` leading axis.
+
+    Mirrors what jax's control-flow batching rules do to a vmapped
+    ``cond``/``while_loop`` carry: every leaf keeps ``new`` where ``pred``
+    and ``old`` elsewhere (select, not arithmetic -- NaNs in dead lanes
+    cannot leak through).
+    """
+    def sel(a, b):
+        return jnp.where(pred.reshape(pred.shape + (1,) * (a.ndim - 1)), a, b)
+
+    return jax.tree.map(sel, new, old)
+
+
+def digitizer_table_step(
+    state: DigitizerState,
+    piece: jax.Array,
+    live: jax.Array,
+    *,
+    tol: float,
+    scl: float,
+    k_min: int,
+    k_max_active: int,
+    lloyd_iters: int = 10,
+    use_kernel: bool = False,
+) -> Tuple[DigitizerState, jax.Array]:
+    """Slot-table batch of ``digitizer_step``: every lane ingests one piece.
+
+    Semantically ``jax.vmap(digitizer_step)`` with a per-lane ``live`` gate,
+    but the k-means inner loop runs as *one* table-level problem
+    (``masked_kmeans_table``) so ``use_kernel=True`` can fuse the Lloyd
+    assign half-step of every slot into a single ``pallas_call``.  The
+    ``use_kernel=False`` path lowers to the same batched ops ``jax.vmap``
+    produces (control flow is hand-lowered exactly the way jax's batching
+    rules do it: both cond branches computed + per-lane select, while-loop
+    with an any() predicate and select-masked carries), keeping end-of-
+    stream results bitwise-equal to the per-slot path.
+
+    Args:
+      state: DigitizerState with an (S,) leading axis on every leaf.
+      piece: (S, 2) one raw (len, inc) piece per lane.
+      live:  (S,) bool -- lanes with ``live=False`` pass through unchanged.
+
+    Returns ``(state, symbols (S,))`` -- symbol 0 for dead lanes.
+    """
+    n_streams, n_max = state.pieces.shape[0], state.pieces.shape[1]
+    k_cap = state.centers.shape[1]
+    piece = jnp.asarray(piece, jnp.float32)
+
+    pieces = jax.vmap(
+        lambda p, pc, m: jax.lax.dynamic_update_slice(p, pc[None, :], (m, 0))
+    )(state.pieces, piece, state.n)
+    n = state.n + 1                                           # (S,)
+    mask = jnp.arange(n_max)[None, :] < n[:, None]            # (S, n_max)
+
+    # --- trivial phase (batched): every piece its own cluster --------------
+    def trivial():
+        labels = jnp.where(mask, jnp.arange(n_max)[None, :], 0).astype(jnp.int32)
+        m = min(k_cap, n_max)  # static
+        centers = jnp.zeros((n_streams, k_cap, 2), jnp.float32)
+        centers = centers.at[:, :m].set(
+            jnp.where(mask[:, :m, None], pieces[:, :m], 0.0))
+        return DigitizerState(pieces, n, labels, centers, n, state.key)
+
+    # --- clustering phase (batched; the k-means runs table-level) ----------
+    def cluster():
+        scl_arr = jnp.asarray(scl, jnp.float32)
+        scales, coords = jax.vmap(
+            lambda p, m: scale_coords(p, m, scl_arr))(pieces, mask)
+        c_scaled = state.centers * scales[:, None, :]
+        bound = jnp.asarray(tol, jnp.float32) ** 2
+        k_hi = jnp.minimum(jnp.asarray(k_max_active, jnp.int32), n)   # (S,)
+        k_o = jnp.maximum(state.k, 1)
+
+        def run(c_init, k):
+            c, lab = masked_kmeans_table(coords, mask, c_init, k, lloyd_iters,
+                                         use_kernel=use_kernel)
+            err = jax.vmap(max_cluster_variance)(coords, mask, c, lab, k)
+            return c, lab, err
+
+        c0, lab0, err0 = run(c_scaled, k_o)
+
+        def growing(k, err):
+            return (k < k_hi) & (err > bound)
+
+        def cond(carry):
+            k, _, _, err, _ = carry
+            return jnp.any(growing(k, err))
+
+        def body(carry):
+            k, c, lab, err, key = carry
+            grow = growing(k, err)                            # (S,)
+            k_new = k + 1
+            splits = jax.vmap(jax.random.split)(key)
+            key_new, sub = splits[:, 0], splits[:, 1]
+
+            # k_old + 1: seed the extra center with the newest piece
+            newest = jnp.take_along_axis(
+                coords, (n - 1)[:, None, None], axis=1)[:, 0]  # (S, 2)
+            seeded = jax.vmap(
+                lambda cc, nw, kk: jax.lax.dynamic_update_slice(
+                    cc, nw[None, :], (kk, 0))
+            )(c, newest, k)
+
+            # beyond that: random re-init from active pieces
+            probs = mask.astype(jnp.float32) / jnp.maximum(
+                jnp.sum(mask, axis=1, keepdims=True), 1)
+            idx = jax.vmap(
+                lambda s, p: jax.random.choice(
+                    s, n_max, shape=(k_cap,), replace=False, p=p)
+            )(sub, probs)
+            randomed = jnp.take_along_axis(coords, idx[:, :, None], axis=1)
+
+            c_init = jnp.where((k_new == k_o + 1)[:, None, None],
+                               seeded, randomed)
+            c2, lab2, err2 = run(c_init, k_new)
+            return _select_lanes(
+                grow, (k_new, c2, lab2, err2, key_new), (k, c, lab, err, key))
+
+        k_fin, c_fin, lab_fin, _, key = jax.lax.while_loop(
+            cond, body, (k_o, c0, lab0, err0, state.key)
+        )
+        del c_fin  # raw-space centers are recomputed from the labeling
+        centers_raw = jax.vmap(
+            lambda p, m, l: _raw_centers(p, m, l, k_cap)[0]
+        )(pieces, mask, lab_fin)
+        return DigitizerState(pieces, n, lab_fin, centers_raw, k_fin, key)
+
+    stepped = _select_lanes(n <= k_min, trivial(), cluster())
+    symbol = jnp.take_along_axis(stepped.labels, (n - 1)[:, None], axis=1)[:, 0]
+    new_state = _select_lanes(live, stepped, state)
+    return new_state, jnp.where(live, symbol, 0)
+
+
+def digitize_span_table(
+    state: DigitizerState,
+    lengths: jax.Array,
+    incs: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    tol: float,
+    scl: float,
+    k_min: int,
+    k_max_active: int,
+    lloyd_iters: int = 10,
+    use_kernel: bool = False,
+) -> Tuple[DigitizerState, jax.Array]:
+    """Slot-table batch of ``digitize_span``: per-lane spans, shared loop.
+
+    Every lane owns a cursor walking its ``[lo_s, hi_s)`` span; the loop
+    runs until every lane drains (trip count = the *widest* span in the
+    table, not ``n_max``), each iteration one table-level
+    ``digitizer_table_step``.  Lanes whose cursor is done are select-masked
+    exactly like a vmapped per-lane while loop, so results are bitwise-equal
+    to ``jax.vmap(digitize_span)`` on the reference path while
+    ``use_kernel=True`` fuses each iteration's Lloyd half-steps across the
+    whole table into single ``pallas_call``s.
+
+    Args:
+      state: batched DigitizerState ((S,) leading axis).
+      lengths/incs: (S, n_max) padded piece buffers.
+      lo/hi: (S,) span bounds per lane (``lo == hi`` lanes are no-ops).
+
+    Returns ``(state, symbols (S, n_max))`` -- symbols 0 outside each span.
+    """
+    n_streams, n_max = lengths.shape
+    pieces = jnp.stack(
+        [lengths.astype(jnp.float32), incs.astype(jnp.float32)], axis=-1
+    )
+
+    def cond(carry):
+        _, _, j = carry
+        return jnp.any(j < hi)
+
+    def body(carry):
+        st, syms, j = carry
+        live = j < hi                                         # (S,)
+        jc = jnp.minimum(j, n_max - 1)
+        piece = jnp.take_along_axis(pieces, jc[:, None, None], axis=1)[:, 0]
+        st2, sym = digitizer_table_step(
+            st, piece, live, tol=tol, scl=scl, k_min=k_min,
+            k_max_active=k_max_active, lloyd_iters=lloyd_iters,
+            use_kernel=use_kernel,
+        )
+        # write each live lane's symbol at its own cursor; dead lanes
+        # rewrite their current value (a no-op)
+        cur = jnp.take_along_axis(syms, jc[:, None], axis=1)[:, 0]
+        syms2 = syms.at[jnp.arange(n_streams), jc].set(
+            jnp.where(live, sym, cur))
+        return st2, syms2, jnp.where(live, j + 1, j)
+
+    final, symbols, _ = jax.lax.while_loop(
+        cond, body,
+        (state, jnp.zeros((n_streams, n_max), jnp.int32),
+         jnp.asarray(lo, jnp.int32)),
+    )
+    return final, symbols
 
 
 @functools.partial(

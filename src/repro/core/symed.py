@@ -37,8 +37,8 @@ from repro.core.compress import (
     compressor_init, compressor_step,
 )
 from repro.core.digitize import (
-    DigitizerState, digitize_pieces, digitize_span, digitizer_delta,
-    digitizer_init,
+    DigitizerState, digitize_pieces, digitize_span, digitize_span_table,
+    digitizer_delta, digitizer_init,
 )
 from repro.core.metrics import compression_rate_symed, drr, dtw_ref
 from repro.core.receiver import (
@@ -58,7 +58,9 @@ __all__ = [
     "symed_receive_chunk",
     "symed_receive_finish",
     "symed_receive_masked_chunk",
+    "symed_receive_masked_chunk_table",
     "symed_receive_masked_pieces",
+    "symed_receive_masked_pieces_table",
     "symed_batch",
     "symbols_to_string",
 ]
@@ -311,6 +313,30 @@ def _digitize_new_pieces(
     return dig_new, jnp.where(in_span, span_syms, symbols_online)
 
 
+def _digitize_new_pieces_table(
+    dig, symbols_online, endpoints, steps, n_pieces, t0, emitted, *, tol, scl,
+    n_max, k_min, k_max, lloyd_iters, use_kernel
+):
+    """Table-level ``_digitize_new_pieces``: one fused pass over all slots.
+
+    ``emitted`` (S,) gates the digitize per lane *by span*, not by branch:
+    off-cadence lanes get an empty ``[dig.n, dig.n)`` span, which the
+    ``digitize_span_table`` cursor loop never visits -- bitwise-identical to
+    the per-slot ``lax.cond(emitted, digitize, skip)`` (whose vmapped select
+    would run the full clustering for every lane and discard it).
+    """
+    lens, incs = jax.vmap(pieces_from_wire)(endpoints, steps, n_pieces, t0)
+    hi = jnp.where(emitted, n_pieces, dig.n)
+    dig_new, span_syms = digitize_span_table(
+        dig, lens, incs, dig.n, hi, tol=tol, scl=scl,
+        k_min=k_min, k_max_active=k_max, lloyd_iters=lloyd_iters,
+        use_kernel=use_kernel,
+    )
+    idx = jnp.arange(n_max)[None, :]
+    in_span = (idx >= dig.n[:, None]) & (idx < hi[:, None])
+    return dig_new, jnp.where(in_span, span_syms, symbols_online)
+
+
 def _symbol_delta_info(n_dig_prev, dig, symbols_online, endpoints, emitted):
     """The per-chunk wire-out payload: what this call's digitize pass added.
 
@@ -460,26 +486,24 @@ def symed_receive_chunk(
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "len_max", "n_max", "k_min", "k_max", "lloyd_iters", "digitize_every_k",
-    ),
-)
-def _masked_receive_chunk(
-    chunk, n_valid, state, *, tol, alpha, scl, len_max, n_max, k_min, k_max,
-    lloyd_iters, digitize_every_k,
-):
+def _masked_sender_wire(chunk, n_valid, state, *, tol, alpha, len_max):
+    """Per-slot sender scan + wire compaction of one masked window.
+
+    The non-digitize half of ``_masked_receive_chunk``, factored out so the
+    table-level path (``symed_receive_masked_chunk_table``) can vmap it
+    while hoisting the digitize pass out of the per-slot program.  Returns
+    ``(comp, t0, t_seen, endpoints, steps, n_pieces, chunks)``.
+
+    Three runtime branches per scan slot (vs the static ``first`` split of
+    ``_receive_chunk``): padding passes the carry through, the stream's
+    very first valid point seeds the compressor (compressor_init, exactly
+    like ``chunk[0]`` in the unmasked path), everything else runs
+    ``compressor_step``.  Per-lane arithmetic is identical to the unmasked
+    path, so end-of-stream outputs stay bitwise-equal.
+    """
     chunk = jnp.asarray(chunk, jnp.float32)
     c_len = chunk.shape[0]
 
-    # --- sender: scan every padded slot; only the first n_valid act --------
-    # Three runtime branches per slot (vs the static ``first`` split of
-    # ``_receive_chunk``): padding passes the carry through, the stream's
-    # very first valid point seeds the compressor (compressor_init, exactly
-    # like ``chunk[0]`` in the unmasked path), everything else runs
-    # ``compressor_step``.  Per-lane arithmetic is identical to the unmasked
-    # path, so end-of-stream outputs stay bitwise-equal.
     def no_event():
         return (
             jnp.zeros((), bool), jnp.zeros((), jnp.float32),
@@ -501,7 +525,7 @@ def _masked_receive_chunk(
                 comp, x, tol=tol, len_max=len_max, alpha=alpha
             )
             # t_seen is the 0-based stream index of x: the receiver's
-            # arrival clock, same convention as ``step_idx`` above
+            # arrival clock, same convention as the unmasked ``step_idx``
             return (comp2, t0, t_seen + 1), (ev.emit, ev.endpoint, t_seen)
 
         branch = jnp.where(valid, jnp.where(t_seen == 0, 1, 2), 0)
@@ -512,12 +536,28 @@ def _masked_receive_chunk(
         step, (state.comp, state.t0, state.t_seen), (chunk, valid)
     )
 
-    # --- wire + receiver: identical to the unmasked path -------------------
     endpoints, steps, n_pieces = compact_chunk(
         state.endpoints, state.steps, state.n_pieces,
         emit, chunk_endpoints, step_idx,
     )
     chunks = state.chunks + (n_valid > 0).astype(jnp.int32)
+    return comp, t0, t_seen, endpoints, steps, n_pieces, chunks
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "len_max", "n_max", "k_min", "k_max", "lloyd_iters", "digitize_every_k",
+    ),
+)
+def _masked_receive_chunk(
+    chunk, n_valid, state, *, tol, alpha, scl, len_max, n_max, k_min, k_max,
+    lloyd_iters, digitize_every_k,
+):
+    # --- sender + wire: scan every padded slot; only the first n_valid act -
+    comp, t0, t_seen, endpoints, steps, n_pieces, chunks = _masked_sender_wire(
+        chunk, n_valid, state, tol=tol, alpha=alpha, len_max=len_max
+    )
 
     n_dig_prev = state.dig.n
     if digitize_every_k:
@@ -590,6 +630,140 @@ def symed_receive_masked_chunk(
         n_max=cfg.n_max, k_min=cfg.k_min, k_max=cfg.k_max,
         lloyd_iters=cfg.lloyd_iters, digitize_every_k=int(digitize_every_k),
     )
+
+
+def symed_receive_masked_chunk_table(
+    windows: jax.Array,
+    n_valid: jax.Array,
+    cfg: SymEDConfig,
+    table: ReceiverState,
+    *,
+    digitize_every_k: int = 1,
+    use_kernel: bool = False,
+) -> Tuple[ReceiverState, Dict[str, jax.Array]]:
+    """Slot-table batch of ``symed_receive_masked_chunk`` with fused digitize.
+
+    The sender scan + wire compaction run per slot under ``jax.vmap``
+    (identical lowering to vmapping the per-slot function); the digitize
+    pass is hoisted to *table level* -- one ``digitize_span_table`` cursor
+    loop whose trip count is the widest span of newly arrived pieces in the
+    table (the per-slot path pays O(n_max) per lane under vmap's
+    cond-to-select lowering), and whose Lloyd assign half-steps fuse across
+    all slots into single ``pallas_call``s when ``use_kernel=True``
+    (``kernels.ops.kmeans_assign``; CPU deployments keep the bitwise
+    vmapped reference path).
+
+    Args:
+      windows: (S, C) padded arrival windows.
+      n_valid: (S,) valid point counts (0 = idle slot, masked no-op).
+      table: batched ReceiverState ((S,) leading axis on every leaf).
+
+    Returns ``(table, info)`` shaped like a vmapped
+    ``symed_receive_masked_chunk`` -- and, on the reference path, bitwise-
+    equal to it (property battery in ``tests/test_stream_service.py``).
+    Callers jit this (``repro.launch.stream._table_step`` donates the table
+    through it); it is not jitted here.
+    """
+    if digitize_every_k < 0:
+        raise ValueError(f"digitize_every_k must be >= 0, got {digitize_every_k}")
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    comp, t0, t_seen, endpoints, steps, n_pieces, chunks = jax.vmap(
+        lambda w, n, s: _masked_sender_wire(
+            w, n, s, tol=cfg.tol, alpha=cfg.alpha, len_max=cfg.len_max)
+    )(windows, n_valid, table)
+
+    n_dig_prev = table.dig.n
+    if digitize_every_k:
+        emitted = (n_valid > 0) & (chunks % int(digitize_every_k) == 0)
+        dig, symbols_online = _digitize_new_pieces_table(
+            table.dig, table.symbols_online, endpoints, steps, n_pieces, t0,
+            emitted, tol=cfg.tol, scl=cfg.scl, n_max=cfg.n_max,
+            k_min=cfg.k_min, k_max=cfg.k_max, lloyd_iters=cfg.lloyd_iters,
+            use_kernel=use_kernel,
+        )
+    else:
+        emitted = jnp.zeros(n_valid.shape, bool)
+        dig, symbols_online = table.dig, table.symbols_online
+
+    new_table = ReceiverState(
+        comp=comp, dig=dig, endpoints=endpoints, steps=steps,
+        n_pieces=n_pieces, symbols_online=symbols_online,
+        t0=t0, t_seen=t_seen, chunks=chunks,
+    )
+    info = {
+        "n_pieces": n_pieces,
+        "n_digitized": dig.n,
+        "t_seen": t_seen,
+        "symbols_online": symbols_online,
+        "symbol_delta": jax.vmap(_symbol_delta_info)(
+            n_dig_prev, dig, symbols_online, endpoints, emitted
+        ),
+    }
+    return new_table, info
+
+
+def symed_receive_masked_pieces_table(
+    piece_endpoints: jax.Array,
+    piece_steps: jax.Array,
+    n_valid: jax.Array,
+    hello: jax.Array,
+    t_seen: jax.Array,
+    cfg: SymEDConfig,
+    table: ReceiverState,
+    *,
+    digitize_every_k: int = 1,
+    use_kernel: bool = False,
+) -> Tuple[ReceiverState, Dict[str, jax.Array]]:
+    """Compressed-in counterpart of ``symed_receive_masked_chunk_table``.
+
+    Scatters each slot's padded piece tuples into its wire buffers (vmapped
+    ``compact_chunk``; the sender already ran the compressor) and digitizes
+    at table level.  See ``symed_receive_masked_pieces`` for the wire
+    semantics and ``symed_receive_masked_chunk_table`` for the fusion /
+    bitwise contract.  Arguments carry an (S,) slot axis.
+    """
+    if digitize_every_k < 0:
+        raise ValueError(f"digitize_every_k must be >= 0, got {digitize_every_k}")
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    p_cap = piece_endpoints.shape[1]
+    t0 = jnp.where(table.t_seen == 0, jnp.asarray(hello, jnp.float32), table.t0)
+    valid = jnp.arange(p_cap)[None, :] < n_valid[:, None]
+    endpoints, steps, n_pieces = jax.vmap(compact_chunk)(
+        table.endpoints, table.steps, table.n_pieces,
+        valid, jnp.asarray(piece_endpoints, jnp.float32),
+        jnp.asarray(piece_steps, jnp.int32),
+    )
+    t_seen = jnp.maximum(table.t_seen, jnp.asarray(t_seen, jnp.int32))
+    chunks = table.chunks + (n_valid > 0).astype(jnp.int32)
+
+    n_dig_prev = table.dig.n
+    if digitize_every_k:
+        emitted = (n_valid > 0) & (chunks % int(digitize_every_k) == 0)
+        dig, symbols_online = _digitize_new_pieces_table(
+            table.dig, table.symbols_online, endpoints, steps, n_pieces, t0,
+            emitted, tol=cfg.tol, scl=cfg.scl, n_max=cfg.n_max,
+            k_min=cfg.k_min, k_max=cfg.k_max, lloyd_iters=cfg.lloyd_iters,
+            use_kernel=use_kernel,
+        )
+    else:
+        emitted = jnp.zeros(n_valid.shape, bool)
+        dig, symbols_online = table.dig, table.symbols_online
+
+    new_table = ReceiverState(
+        comp=table.comp, dig=dig, endpoints=endpoints, steps=steps,
+        n_pieces=n_pieces, symbols_online=symbols_online,
+        t0=t0, t_seen=t_seen, chunks=chunks,
+    )
+    info = {
+        "n_pieces": n_pieces,
+        "n_digitized": dig.n,
+        "t_seen": t_seen,
+        "symbols_online": symbols_online,
+        "symbol_delta": jax.vmap(_symbol_delta_info)(
+            n_dig_prev, dig, symbols_online, endpoints, emitted
+        ),
+    }
+    return new_table, info
 
 
 @functools.partial(

@@ -12,6 +12,15 @@ index map is constant over the N-tile axis, so Pallas keeps it in VMEM and
 writes back once).  Feature dim D is padded to the 128-lane tile by the
 wrapper; SymED's piece space is D=2 but the kernel is written for general D
 (the benchmark sweeps D to show MXU utilization).
+
+This is the half-step the resident service's fused table digitize runs
+once per Lloyd iteration across the whole slot table
+(``core.digitize.masked_kmeans_table`` with ``use_kernel=True``, dispatched
+through ``kernels.ops.kmeans_assign``).  Contract note: the kernel zeroes
+the labels of masked-out pieces while the jnp reference path leaves the
+argmin there, so the kernel path is allclose-but-not-bitwise -- which is
+why ``StreamServer`` defaults ``use_kernel`` to off on CPU, where the
+bitwise delta-equivalence battery runs.
 """
 from __future__ import annotations
 

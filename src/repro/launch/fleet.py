@@ -319,7 +319,12 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, f
     sender->receiver traffic against the raw stream (the paper's headline
     9.5% compression of network traffic; here the 4 B/piece endpoints +
     hello, i.e. ``wire_bytes``), ``wire_out_bytes``/``wire_out_ratio`` the
-    receiver's outbound symbol-delta frames.
+    receiver's outbound symbol-delta frames.  Both ratios share the
+    ``raw_bytes`` denominator: outbound frames against the *compressed*
+    inbound bytes read > 1.0 on short cadence windows (frame headers swamp
+    the already-reduced denominator) even when the service is cutting
+    traffic, so the out-ratio, like the in-ratio, answers "what fraction of
+    the original signal's bytes crossed this hop".
     """
     t = {k: float(v) for k, v in tele.items()}
     dt = max(wall_seconds, 1e-9)
@@ -336,7 +341,7 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, f
         "wire_in_ratio": t["wire_bytes"] / max(t["raw_bytes"], 1.0),
         # wire-out telemetry is absent from pre-delta callers' dicts
         "wire_out_bytes": t.get("wire_out_bytes", 0.0),
-        "wire_out_ratio": t.get("wire_out_bytes", 0.0) / max(t["wire_bytes"], 1.0),
+        "wire_out_ratio": t.get("wire_out_bytes", 0.0) / max(t["raw_bytes"], 1.0),
     }
 
 

@@ -75,7 +75,7 @@ from repro.core.receiver import (
 from repro.core.reconstruct import reconstruct_from_pieces
 from repro.core.symed import (
     SymEDConfig, receiver_init, symbols_to_string, symed_receive_finish,
-    symed_receive_masked_chunk, symed_receive_masked_pieces,
+    symed_receive_masked_chunk_table, symed_receive_masked_pieces_table,
 )
 from repro.kernels import ops
 
@@ -83,28 +83,36 @@ __all__ = ["StreamServer", "main"]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "digitize_every_k"), donate_argnums=(0,)
+    jax.jit, static_argnames=("cfg", "digitize_every_k", "use_kernel"),
+    donate_argnums=(0,),
 )
-def _table_step(table, windows, n_valid, *, cfg, digitize_every_k):
-    """One batched service step: every slot ingests its padded window."""
-    return jax.vmap(
-        lambda s, w, n: symed_receive_masked_chunk(
-            w, n, cfg, s, digitize_every_k=digitize_every_k
-        )
-    )(table, windows, n_valid)
+def _table_step(table, windows, n_valid, *, cfg, digitize_every_k,
+                use_kernel=False):
+    """One batched service step: every slot ingests its padded window.
+
+    The table-level receive fuses the digitize pass across slots (one
+    cursor loop sized by the widest span of new pieces, Pallas Lloyd
+    half-steps when ``use_kernel``); the sender half vmaps per slot.  All
+    loop-varying quantities (windows, valid counts, the in-state cadence
+    clock) are runtime operands -- only capacity changes retrace.
+    """
+    return symed_receive_masked_chunk_table(
+        windows, n_valid, cfg, table,
+        digitize_every_k=digitize_every_k, use_kernel=use_kernel,
+    )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "digitize_every_k"), donate_argnums=(0,)
+    jax.jit, static_argnames=("cfg", "digitize_every_k", "use_kernel"),
+    donate_argnums=(0,),
 )
 def _table_step_pieces(table, endpoints, steps, n_valid, hello, t_seen, *,
-                       cfg, digitize_every_k):
+                       cfg, digitize_every_k, use_kernel=False):
     """Compressed-in service step: every slot scatters its padded pieces."""
-    return jax.vmap(
-        lambda s, e, st, n, h, t: symed_receive_masked_pieces(
-            e, st, n, h, t, cfg, s, digitize_every_k=digitize_every_k
-        )
-    )(table, endpoints, steps, n_valid, hello, t_seen)
+    return symed_receive_masked_pieces_table(
+        endpoints, steps, n_valid, hello, t_seen, cfg, table,
+        digitize_every_k=digitize_every_k, use_kernel=use_kernel,
+    )
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -203,6 +211,23 @@ class StreamServer:
         ``max_sessions``.  Each distinct capacity traces the batched step
         once (between-steps cost, amortized at steady state).
       min_slots: autoscale floor (default: the mesh device count, else 1).
+      shrink_patience: autoscale hysteresis -- shrink only after this many
+        *consecutive* low-occupancy observations (closes / ingest rounds).
+        A session count oscillating across the quarter-occupancy boundary
+        would otherwise alternate grow/shrink every tick, re-gathering the
+        slot table each time.  ``1`` restores the immediate-shrink behavior.
+        Resizes never touch slot contents (pure gather/concat), so delta
+        streams are bitwise-unaffected by the setting (property tested).
+      use_kernel: route the digitize pass's Lloyd half-steps through the
+        fused Pallas k-means kernel, one ``pallas_call`` per iteration for
+        the whole slot table (default: on for TPU backends, off on CPU
+        where the bitwise vmapped reference is also the fastest lowering).
+      pretrace: trace + compile the batched step for *every* capacity on
+        the autoscale ladder at construction time (one donated call per
+        rung on blank tables), so no ingest round ever pays a trace: grows
+        and shrinks hit the jit cache.  Off by default -- tests and
+        short-lived drivers would pay ladder-warmup for rungs they never
+        visit; the CLI and benchmarks turn it on.
       seed: base PRNG seed for per-session digitizer keys.
       mesh: optional 1-D ``(data,)`` mesh; the slot table shards over it
         (``max_sessions``, ``min_slots`` and every ladder capacity must
@@ -221,6 +246,9 @@ class StreamServer:
         evict_idle: bool = False,
         autoscale: bool = False,
         min_slots: Optional[int] = None,
+        shrink_patience: int = 3,
+        use_kernel: Optional[bool] = None,
+        pretrace: bool = False,
         seed: int = 0,
         mesh=None,
     ):
@@ -246,6 +274,9 @@ class StreamServer:
             raise ValueError(
                 f"min_slots={min_slots} must divide over the "
                 f"{mesh.devices.size}-device mesh")
+        if shrink_patience < 1:
+            raise ValueError(
+                f"shrink_patience must be >= 1, got {shrink_patience}")
         self.cfg = cfg
         self.max_sessions = int(max_sessions)
         self.window_cap = int(window_cap)
@@ -255,6 +286,10 @@ class StreamServer:
         self.evict_idle = bool(evict_idle)
         self.autoscale = bool(autoscale)
         self.min_slots = int(min_slots)
+        self.shrink_patience = int(shrink_patience)
+        self._low_ticks = 0         # consecutive low-occupancy observations
+        self.use_kernel = (bool(use_kernel) if use_kernel is not None
+                           else not ops.on_cpu())
         # capacity ladder: min_slots * 2^i, clipped at max_sessions
         self._ladder = [self.min_slots]
         while self._ladder[-1] < self.max_sessions:
@@ -265,6 +300,7 @@ class StreamServer:
         self._serial = 0            # sessions ever opened (key derivation)
         self._clock = 0             # ingest rounds (LRU ordering)
         self._sessions: Dict[str, _Session] = {}
+        self._dtw_due: set = set()  # sessions whose DTW cadence fired
         self._free = list(range(self.capacity))
         self.evicted: Dict[str, dict] = {}
         # fleet-wide wire accounting (the service's fleet_report counterpart)
@@ -275,6 +311,35 @@ class StreamServer:
             "grows": 0, "shrinks": 0,
         }
         self._table = self._shard(self._blanks(self.capacity))
+        if pretrace:
+            self._pretrace_ladder()
+
+    def _pretrace_ladder(self) -> None:
+        """Warm the jit cache for every capacity on the autoscale ladder.
+
+        AOT ``lower().compile()`` would not populate the call cache jit
+        actually consults, so each rung makes one real (donated) call on a
+        blank table with zero-valid windows -- a masked no-op that leaves no
+        state behind.  After this, grow/shrink during serving never traces
+        (asserted flat by ``tests/test_stream_service.py`` via
+        ``_table_step._cache_size()``).
+        """
+        ladder = self._ladder if self.autoscale else [self.capacity]
+        for cap in ladder:
+            blanks = self._shard(self._blanks(cap))
+            win_f = self._put(jnp.zeros((cap, self.window_cap), jnp.float32))
+            win_i = self._put(jnp.zeros((cap, self.window_cap), jnp.int32))
+            cnt = self._put(jnp.zeros((cap,), jnp.int32))
+            scal_f = self._put(jnp.zeros((cap,), jnp.float32))
+            scal_i = self._put(jnp.zeros((cap,), jnp.int32))
+            blanks, _ = _table_step(
+                blanks, win_f, cnt,
+                cfg=self.cfg, digitize_every_k=self.digitize_every_k,
+                use_kernel=self.use_kernel)
+            _table_step_pieces(
+                blanks, win_f, win_i, cnt, scal_f, scal_i,
+                cfg=self.cfg, digitize_every_k=self.digitize_every_k,
+                use_kernel=self.use_kernel)
 
     def _blanks(self, n: int):
         """``n`` fresh blank slots (keys are placeholders; ``open`` reseeds)."""
@@ -286,6 +351,12 @@ class StreamServer:
             table = jax.device_put(
                 table, NamedSharding(self._mesh, P("data")))
         return table
+
+    def _put(self, arr):
+        """Stage one slot-axis operand (sharded over the mesh if present)."""
+        if self._mesh is not None:
+            arr = jax.device_put(arr, NamedSharding(self._mesh, P("data")))
+        return arr
 
     # ------------------------------------------------------------------ API
 
@@ -356,6 +427,11 @@ class StreamServer:
         consecutive rounds so every session advances in lockstep.  Returns
         the merged symbol-delta frame per stream:
         ``{"labels", "endpoints", "n_new", "frames", "bytes"}``.
+
+        Rounds are double-buffered against the device: round ``r`` is
+        dispatched (async), round ``r+1`` is packed host-side, and only
+        then is round ``r``'s output transferred back -- host staging and
+        accounting overlap device work instead of serializing with it.
         """
         wins = {}
         for sid, w in arrivals.items():
@@ -368,6 +444,7 @@ class StreamServer:
             (len(w) + self.window_cap - 1) // self.window_cap
             for w in wins.values()
         ) if wins else 0
+        pend_active, pend_info, pend_clock = [], None, 0  # round in flight
         for r in range(rounds):
             padded = np.zeros((self.capacity, self.window_cap), np.float32)
             n_valid = np.zeros((self.capacity,), np.int32)
@@ -380,41 +457,50 @@ class StreamServer:
                 padded[sess.slot, : len(part)] = part
                 n_valid[sess.slot] = len(part)
                 active.append((sid, part))
-            if not active:
-                continue
-            windows = jnp.asarray(padded)
-            counts = jnp.asarray(n_valid)
-            if self._mesh is not None:
-                sharding = NamedSharding(self._mesh, P("data"))
-                windows = jax.device_put(windows, sharding)
-                counts = jax.device_put(counts, sharding)
-            self._table, info = _table_step(
-                self._table, windows, counts,
-                cfg=self.cfg, digitize_every_k=self.digitize_every_k)
-            self.totals["steps"] += 1
-            self._clock += 1
-            d = info["symbol_delta"]
-            # one blocking transfer per round, not one per output leaf
-            labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
-                (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
-                 info["t_seen"]))
-            for sid, part in active:
-                sess = self._sessions[sid]
-                self._account_delta(
-                    sess, deltas[sid], labels[sess.slot],
-                    endpoints[sess.slot], int(n_new[sess.slot]),
-                    bool(emitted[sess.slot]))
-                sess.chunks += 1
-                sess.t_seen = int(t_seen[sess.slot])
-                sess.last_active = self._clock
-                self.totals["points_in"] += len(part)
-                self.totals["bytes_in"] += 4.0 * len(part)
-                if sess.raw is not None:
-                    sess.raw.append(part)
-                if (self.dtw_every and sess.raw is not None
-                        and sess.chunks % self.dtw_every == 0):
-                    sess.dtw = self._monitor_dtw(sess)
+            if active:
+                windows = self._put(jnp.asarray(padded))
+                counts = self._put(jnp.asarray(n_valid))
+                self._table, info = _table_step(
+                    self._table, windows, counts,
+                    cfg=self.cfg, digitize_every_k=self.digitize_every_k,
+                    use_kernel=self.use_kernel)
+                self.totals["steps"] += 1
+                self._clock += 1
+            # harvest the *previous* round only after this one is in flight
+            if pend_active:
+                self._harvest_round(pend_active, pend_info, pend_clock,
+                                    deltas)
+            pend_active = active
+            if active:
+                pend_info, pend_clock = info, self._clock
+        if pend_active:
+            self._harvest_round(pend_active, pend_info, pend_clock, deltas)
+        self._run_dtw_monitor()
         return _finalize_deltas(deltas)
+
+    def _harvest_round(self, active, info, clock, deltas) -> None:
+        """Transfer one round's outputs and fold them into the books."""
+        d = info["symbol_delta"]
+        # one blocking transfer per round, not one per output leaf
+        labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
+            (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
+             info["t_seen"]))
+        for sid, part in active:
+            sess = self._sessions[sid]
+            self._account_delta(
+                sess, deltas[sid], labels[sess.slot],
+                endpoints[sess.slot], int(n_new[sess.slot]),
+                bool(emitted[sess.slot]))
+            sess.chunks += 1
+            sess.t_seen = int(t_seen[sess.slot])
+            sess.last_active = clock
+            self.totals["points_in"] += len(part)
+            self.totals["bytes_in"] += 4.0 * len(part)
+            if sess.raw is not None:
+                sess.raw.append(part)
+            if (self.dtw_every and sess.raw is not None
+                    and sess.chunks % self.dtw_every == 0):
+                self._dtw_due.add(sid)
 
     def ingest_pieces_many(self, arrivals: Dict[str, dict]) -> Dict[str, dict]:  # symlint: hot-path
         """Compressed-in counterpart of ``ingest_many``.
@@ -447,6 +533,7 @@ class StreamServer:
             ((len(p["endpoints"]) + cap - 1) // cap or 1)
             for p in pends.values()
         ) if pends else 0
+        pend_active, pend_info, pend_clock = [], None, 0  # round in flight
         for r in range(rounds):
             pad_e = np.zeros((self.capacity, cap), np.float32)
             pad_s = np.zeros((self.capacity, cap), np.int32)
@@ -466,41 +553,50 @@ class StreamServer:
                 hello[sess.slot] = p["t0"]
                 t_seen_in[sess.slot] = p["t_seen"]
                 active.append((sid, len(part_e)))
-            if not active:
-                continue
-            args = [jnp.asarray(x)
-                    for x in (pad_e, pad_s, n_valid, hello, t_seen_in)]
-            if self._mesh is not None:
-                sharding = NamedSharding(self._mesh, P("data"))
-                args = [jax.device_put(x, sharding) for x in args]
-            self._table, info = _table_step_pieces(
-                self._table, *args,
-                cfg=self.cfg, digitize_every_k=self.digitize_every_k)
-            self.totals["steps"] += 1
-            self._clock += 1
-            d = info["symbol_delta"]
-            # one blocking transfer per round, not one per output leaf
-            labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
-                (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
-                 info["t_seen"]))
-            for sid, n_in in active:
-                sess = self._sessions[sid]
-                self._account_delta(
-                    sess, deltas[sid], labels[sess.slot],
-                    endpoints[sess.slot], int(n_new[sess.slot]),
-                    bool(emitted[sess.slot]))
-                if n_in:
-                    sess.chunks += 1
-                now_seen = int(t_seen[sess.slot])
-                self.totals["points_in"] += max(now_seen - sess.t_seen, 0)
-                sess.t_seen = now_seen
-                sess.last_active = self._clock
                 if r == 0:
-                    p = pends[sid]
                     wire = (p["wire_bytes"]
                             or PIECE_TUPLE_BYTES * len(p["endpoints"]))
                     self.totals["bytes_in"] += wire
+            if active:
+                args = [self._put(jnp.asarray(x))
+                        for x in (pad_e, pad_s, n_valid, hello, t_seen_in)]
+                self._table, info = _table_step_pieces(
+                    self._table, *args,
+                    cfg=self.cfg, digitize_every_k=self.digitize_every_k,
+                    use_kernel=self.use_kernel)
+                self.totals["steps"] += 1
+                self._clock += 1
+            # harvest the *previous* round only after this one is in flight
+            if pend_active:
+                self._harvest_pieces_round(pend_active, pend_info,
+                                           pend_clock, deltas)
+            pend_active = active
+            if active:
+                pend_info, pend_clock = info, self._clock
+        if pend_active:
+            self._harvest_pieces_round(pend_active, pend_info, pend_clock,
+                                       deltas)
         return _finalize_deltas(deltas)
+
+    def _harvest_pieces_round(self, active, info, clock, deltas) -> None:
+        """Pieces-mode counterpart of ``_harvest_round``."""
+        d = info["symbol_delta"]
+        # one blocking transfer per round, not one per output leaf
+        labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
+            (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
+             info["t_seen"]))
+        for sid, n_in in active:
+            sess = self._sessions[sid]
+            self._account_delta(
+                sess, deltas[sid], labels[sess.slot],
+                endpoints[sess.slot], int(n_new[sess.slot]),
+                bool(emitted[sess.slot]))
+            if n_in:
+                sess.chunks += 1
+            now_seen = int(t_seen[sess.slot])
+            self.totals["points_in"] += max(now_seen - sess.t_seen, 0)
+            sess.t_seen = now_seen
+            sess.last_active = clock
 
     def close(self, stream_id: str) -> dict:
         """Flush the tail, emit the closing delta frame, free the slot.
@@ -556,7 +652,13 @@ class StreamServer:
         the raw-points equivalent (4 B/point): ~1 for raw-in transport,
         ~``PIECE_TUPLE_BYTES / (4 * points-per-piece)`` when senders
         compress locally (the paper's 9.5%-of-raw headline is this ratio's
-        sender-side half).
+        sender-side half).  ``wire_out_ratio`` measures outbound symbol
+        frames against the *same raw-bytes denominator* -- it answers "what
+        fraction of the original signal's bytes did downstream consumers
+        receive", so it stays comparable across transports.  (It used to
+        divide by ``bytes_in``, which for compressed-in transport is itself
+        ~10% of raw -- tiny cadence frames with 4 B headers then pushed the
+        ratio past 1.0 even though the service was *reducing* traffic.)
         """
         t = {k: float(v) for k, v in self.totals.items()}
         dt = max(wall_seconds, 1e-9)
@@ -572,7 +674,7 @@ class StreamServer:
             "raw_bytes": raw_bytes,
             "wire_in_bytes": t["bytes_in"],
             "wire_in_ratio": t["bytes_in"] / max(raw_bytes, 1.0),
-            "wire_out_ratio": t["bytes_out"] / max(t["bytes_in"], 1.0),
+            "wire_out_ratio": t["bytes_out"] / max(raw_bytes, 1.0),
         }
 
     # ------------------------------------------------------------- internals
@@ -611,9 +713,30 @@ class StreamServer:
         self.totals["grows"] += 1
 
     def _maybe_shrink(self) -> None:
-        """Walk down the ladder while occupancy is at most a quarter of the
-        capacity (hysteresis: the shrunken table is at most half full, so a
-        single open cannot immediately force a re-grow)."""
+        """Walk down the ladder once occupancy has stayed at or below a
+        quarter of the capacity for ``shrink_patience`` consecutive
+        qualifying ticks.
+
+        Two hysteresis mechanisms compose here: the quarter-occupancy bound
+        means the shrunken table is at most half full (a single open cannot
+        immediately force a re-grow), and the patience counter means a
+        session count oscillating across the boundary every tick does not
+        re-gather the slot table every tick -- it must *stay* low for
+        ``shrink_patience`` observations first.  The walk-down itself is a
+        pure permutation of live slots, so delta output is bitwise
+        unaffected by when (or whether) it fires.
+        """
+        if not (self.autoscale and self.capacity > self.min_slots):
+            self._low_ticks = 0
+            return
+        target = self._ladder[self._ladder.index(self.capacity) - 1]
+        if len(self._sessions) > target // 2:
+            self._low_ticks = 0
+            return
+        self._low_ticks += 1
+        if self._low_ticks < self.shrink_patience:
+            return
+        self._low_ticks = 0
         while self.autoscale and self.capacity > self.min_slots:
             target = self._ladder[self._ladder.index(self.capacity) - 1]
             if len(self._sessions) > target // 2:
@@ -631,22 +754,38 @@ class StreamServer:
             self.capacity = target
             self.totals["shrinks"] += 1
 
-    def _monitor_dtw(self, sess: _Session) -> float:
-        """Online reconstruction error: DTW(raw so far, pieces so far).
+    def _run_dtw_monitor(self) -> None:
+        """Online reconstruction error for every session whose DTW cadence
+        fired during this ingest call: DTW(raw so far, pieces so far).
 
+        All due sessions are read out of the slot table in one gather and
+        one host transfer (the monitor used to do a per-session
+        ``_read_slot`` + unannotated transfer inside the serving loop).
         Jit-compiles per distinct stream length (the reconstruction's output
         shape); the simulated driver keeps lengths small, a production
         monitor would bucket them.
         """
-        raw = np.concatenate(sess.raw)
-        sub = _read_slot(self._table, jnp.asarray(sess.slot, jnp.int32))
-        lens, incs = pieces_from_wire(
-            sub.endpoints, sub.steps, sub.n_pieces, sub.t0)
-        rec = reconstruct_from_pieces(
-            lens, incs, sub.n_pieces, sub.t0, raw.shape[0])
-        d = ops.dtw(raw[None], np.asarray(rec)[None], band=self.dtw_band,
-                    force_ref=ops.on_cpu())
-        return float(d[0])
+        if not self._dtw_due:
+            return
+        due = [self._sessions[sid] for sid in sorted(self._dtw_due)
+               if sid in self._sessions]
+        self._dtw_due.clear()
+        if not due:
+            return
+        subs = _gather_slots(
+            self._table, jnp.asarray([s.slot for s in due], jnp.int32))
+        # one transfer for the whole due set, off the per-round hot path
+        subs = jax.device_get(subs)  # sync: ok
+        for i, sess in enumerate(due):
+            sub = jax.tree.map(lambda leaf: leaf[i], subs)
+            raw = np.concatenate(sess.raw)
+            lens, incs = pieces_from_wire(
+                sub.endpoints, sub.steps, sub.n_pieces, sub.t0)
+            rec = reconstruct_from_pieces(
+                lens, incs, sub.n_pieces, sub.t0, raw.shape[0])
+            d = ops.dtw(raw[None], np.asarray(rec)[None], band=self.dtw_band,
+                        force_ref=ops.on_cpu())
+            sess.dtw = float(d[0])
 
 
 # ----------------------------------------------------------------- CLI
@@ -717,6 +856,8 @@ def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
         if args.min_slots % args.devices:
             ap.error(f"--min-slots {args.min_slots} must divide over "
                      f"--devices {args.devices}")
+    if args.shrink_patience < 1:
+        ap.error(f"--shrink-patience must be >= 1, got {args.shrink_patience}")
 
 
 def main():
@@ -740,6 +881,12 @@ def main():
                          "(power-of-two ladder from --min-slots)")
     ap.add_argument("--min-slots", type=int, default=None,
                     help="autoscale floor (default: --devices)")
+    ap.add_argument("--shrink-patience", type=int, default=3,
+                    help="consecutive low-occupancy ticks before the table "
+                         "walks down the ladder (1: shrink immediately)")
+    ap.add_argument("--pretrace", action="store_true",
+                    help="warm the jit cache for every ladder capacity at "
+                         "server init (no tracing during serving)")
     ap.add_argument("--verify", action="store_true",
                     help="check delta concatenation against symed_encode")
     ap.add_argument("--devices", type=int, default=1,
@@ -760,7 +907,8 @@ def main():
         cfg, max_sessions=args.max_slots, window_cap=args.window,
         digitize_every_k=args.digitize_every, dtw_every=args.dtw_every,
         evict_idle=args.evict, autoscale=args.autoscale,
-        min_slots=args.min_slots, seed=args.seed, mesh=mesh,
+        min_slots=args.min_slots, shrink_patience=args.shrink_patience,
+        seed=args.seed, mesh=mesh, pretrace=args.pretrace,
     )
     data = np.asarray(make_fleet(args.sessions, args.length, seed=args.seed))
     keys = jax.random.split(jax.random.key(args.seed), args.sessions)

@@ -133,3 +133,114 @@ class TestDtwKernel:
         d_b3 = np.asarray(ops.dtw(x, y, band=3))
         assert (d_b3 >= d_b10 - 1e-4).all()
         assert (d_b10 >= d_full - 1e-4).all()
+
+
+class TestMaskedKmeansTable:
+    """Slot-table Lloyd loop (``core.digitize.masked_kmeans_table``): the
+    vmapped reference path must be bitwise-equal to per-slot
+    ``masked_kmeans``; the fused-kernel path matches to float tolerance with
+    masked labels zeroed (the documented contract that keeps
+    ``use_kernel=False`` on bitwise-checked CPU deployments)."""
+
+    def _problem(self, s, n_max, k_max, seed):
+        rng = np.random.default_rng(seed)
+        coords = jnp.asarray(rng.normal(size=(s, n_max, 2)), jnp.float32)
+        n_valid = rng.integers(1, n_max + 1, size=(s,))
+        mask = jnp.asarray(np.arange(n_max)[None, :] < n_valid[:, None])
+        k = jnp.asarray(rng.integers(1, k_max + 1, size=(s,)), jnp.int32)
+        c_init = jnp.asarray(rng.normal(size=(s, k_max, 2)), jnp.float32)
+        return coords, mask, c_init, k
+
+    @pytest.mark.parametrize("s,n_max,k_max", [(1, 16, 4), (4, 64, 8), (7, 33, 5)])
+    def test_ref_path_bitwise_vs_per_slot(self, s, n_max, k_max):
+        from repro.core.digitize import masked_kmeans, masked_kmeans_table
+
+        coords, mask, c_init, k = self._problem(s, n_max, k_max, 11)
+        ct, lt = masked_kmeans_table(coords, mask, c_init, k, iters=5)
+        cv, lv = jax.vmap(
+            lambda co, m, ci, kk: masked_kmeans(co, m, ci, kk, 5)
+        )(coords, mask, c_init, k)
+        np.testing.assert_array_equal(np.asarray(lt), np.asarray(lv))
+        np.testing.assert_array_equal(np.asarray(ct), np.asarray(cv))
+
+    @pytest.mark.parametrize("s,n_max,k_max", [(2, 32, 4), (5, 48, 8)])
+    def test_kernel_path_matches_ref(self, s, n_max, k_max):
+        from repro.core.digitize import masked_kmeans_table
+
+        coords, mask, c_init, k = self._problem(s, n_max, k_max, 23)
+        c_ref, l_ref = masked_kmeans_table(coords, mask, c_init, k, iters=5)
+        c_krn, l_krn = masked_kmeans_table(coords, mask, c_init, k, iters=5,
+                                           use_kernel=True)
+        np.testing.assert_allclose(np.asarray(c_krn), np.asarray(c_ref),
+                                   rtol=1e-5, atol=1e-5)
+        valid = np.asarray(mask, bool)
+        np.testing.assert_array_equal(
+            np.asarray(l_krn)[valid], np.asarray(l_ref)[valid])
+        assert (np.asarray(l_krn)[~valid] == 0).all()
+
+
+class TestDigitizeSpanTable:
+    """The fused table digitize (``digitize_span_table`` /
+    ``digitizer_table_step``) against vmapped per-slot ``digitize_span``:
+    bitwise on every DigitizerState leaf and emitted symbol, including
+    resumption across split spans (the streaming-cadence shape)."""
+
+    CFGK = dict(tol=0.5, scl=1.0, k_min=3, k_max_active=8, lloyd_iters=5)
+
+    def _table(self, s, n_max, k_max, seed):
+        from repro.core.digitize import digitizer_init
+
+        rng = np.random.default_rng(seed)
+        keys = jax.random.split(jax.random.key(seed), s)
+        state = jax.vmap(lambda kk: digitizer_init(n_max, k_max, kk))(keys)
+        lengths = jnp.asarray(rng.integers(1, 9, size=(s, n_max)), jnp.float32)
+        incs = jnp.asarray(rng.normal(0, 2, size=(s, n_max)), jnp.float32)
+        hi = jnp.asarray(rng.integers(0, n_max + 1, size=(s,)), jnp.int32)
+        return state, lengths, incs, hi
+
+    def _assert_state_equal(self, a, b, msg):
+        for name in a._fields:
+            la, lb = getattr(a, name), getattr(b, name)
+            if name == "key":
+                la, lb = jax.random.key_data(la), jax.random.key_data(lb)
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb), err_msg=f"{msg}: {name}")
+
+    @pytest.mark.parametrize("s,n_max", [(1, 12), (4, 24), (6, 16)])
+    def test_bitwise_vs_vmapped_per_slot(self, s, n_max):
+        from repro.core.digitize import digitize_span, digitize_span_table
+
+        state, lengths, incs, hi = self._table(s, n_max, 8, 31 + s)
+        lo = jnp.zeros((s,), jnp.int32)
+        st_t, sy_t = digitize_span_table(state, lengths, incs, lo, hi,
+                                         **self.CFGK)
+        st_v, sy_v = jax.vmap(
+            lambda st, le, ic, l, h: digitize_span(st, le, ic, l, h,
+                                                   **self.CFGK)
+        )(state, lengths, incs, lo, hi)
+        self._assert_state_equal(st_t, st_v, f"s={s}")
+        np.testing.assert_array_equal(np.asarray(sy_t), np.asarray(sy_v))
+
+    def test_split_spans_resume_bitwise(self):
+        """Digesting [0, mid) then [mid, hi) must equal one [0, hi) pass --
+        per lane, with ragged mids (the arrival-cadence property)."""
+        from repro.core.digitize import digitize_span_table
+
+        s, n_max = 5, 20
+        state, lengths, incs, hi = self._table(s, n_max, 8, 99)
+        rng = np.random.default_rng(7)
+        mid = jnp.asarray(
+            [int(rng.integers(0, int(h) + 1)) for h in np.asarray(hi)],
+            jnp.int32)
+        lo = jnp.zeros((s,), jnp.int32)
+        st_one, sy_one = digitize_span_table(state, lengths, incs, lo, hi,
+                                             **self.CFGK)
+        st_a, sy_a = digitize_span_table(state, lengths, incs, lo, mid,
+                                         **self.CFGK)
+        st_b, sy_b = digitize_span_table(st_a, lengths, incs, mid, hi,
+                                         **self.CFGK)
+        self._assert_state_equal(st_b, st_one, "split-resume")
+        idx = np.arange(n_max)[None, :]
+        in_a = idx < np.asarray(mid)[:, None]
+        merged = np.where(in_a, np.asarray(sy_a), np.asarray(sy_b))
+        np.testing.assert_array_equal(merged, np.asarray(sy_one))

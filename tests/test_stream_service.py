@@ -342,3 +342,127 @@ class TestDeltaEquivalence:
         assert res["delta"]["n_new"] == 0
         server.open("b")  # slot is reusable
         assert server.active_sessions == 1
+
+
+class TestResidentHotPath:
+    """The retrace-free serving-loop contracts: shrink hysteresis, ladder
+    pre-tracing, and the wire-out accounting definition."""
+
+    def _oscillate(self, patience, seed, cycles=3):
+        """Open/close session pairs across the quarter-occupancy boundary;
+        return (per-session (result, deltas, ts, key), totals)."""
+        rng = np.random.default_rng(9000 + seed)
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              digitize_every_k=1, autoscale=True,
+                              min_slots=1, shrink_patience=patience)
+        sessions = {}
+        for cycle in range(cycles):
+            pair = [f"c{cycle}a", f"c{cycle}b"]
+            data = {}
+            for j, sid in enumerate(pair):
+                ts = make_stream(rng, 64)
+                key = jax.random.key(300 + 10 * cycle + j)
+                server.open(sid, key=key)  # second open forces a grow
+                data[sid] = (ts, key)
+            deltas = {sid: [] for sid in pair}
+            cursors = {sid: 0 for sid in pair}
+            while any(c < 64 for c in cursors.values()):
+                batch = {}
+                for sid in pair:
+                    if cursors[sid] < 64:
+                        n = int(rng.integers(8, 40))
+                        batch[sid] = data[sid][0][
+                            cursors[sid]: cursors[sid] + n]
+                        cursors[sid] = min(cursors[sid] + n, 64)
+                for sid, d in server.ingest_many(batch).items():
+                    deltas[sid].append(d)
+            for sid in pair:  # drain: the second close crosses the boundary
+                res = server.close(sid)
+                sessions[sid] = (res, deltas[sid], *data[sid])
+        return sessions, dict(server.totals)
+
+    @given(st.integers(0, 2))
+    @settings(max_examples=3, deadline=None)
+    def test_shrink_hysteresis_stops_thrash_bitwise(self, seed):
+        """A session count oscillating across the shrink boundary re-gathers
+        the table every cycle at patience=1 but not at patience=3 -- and the
+        patience setting never changes a single emitted byte (the walk-down
+        is a pure permutation, so *when* it fires is unobservable in the
+        delta stream)."""
+        eager, t1 = self._oscillate(1, seed)
+        patient, t3 = self._oscillate(3, seed)
+        assert t1["shrinks"] >= 2, t1
+        assert t3["shrinks"] == 0, t3
+        assert t3["grows"] < t1["grows"], (t1, t3)
+        assert set(eager) == set(patient)
+        for sid, (res, deltas, ts, key) in eager.items():
+            assert_session_matches_encode(
+                res, deltas, ts, key, f"patience=1 {sid}")
+        for sid, (res, deltas, ts, key) in patient.items():
+            assert_session_matches_encode(
+                res, deltas, ts, key, f"patience=3 {sid}")
+            labels_e, eps_e = concat_delta(eager[sid][1], eager[sid][0])
+            labels_p, eps_p = concat_delta(deltas, res)
+            np.testing.assert_array_equal(labels_e, labels_p)
+            np.testing.assert_array_equal(eps_e, eps_p)
+
+    def test_pretrace_cache_flat_across_grow_shrink_grow(self, rng):
+        """With the ladder pre-traced at init, a grow/shrink/grow cycle
+        never compiles: the jit cache entry count stays flat through every
+        capacity the server serves at."""
+        from repro.launch.stream import _table_step
+
+        server = StreamServer(CFG, max_sessions=4, window_cap=WINDOW_CAP,
+                              digitize_every_k=1, autoscale=True,
+                              min_slots=1, shrink_patience=1, pretrace=True)
+        base = _table_step._cache_size()
+        for cycle in range(2):  # grow 1->2->4, drain back to 1, again
+            for i in range(3):
+                sid = f"g{cycle}s{i}"
+                server.open(sid, key=jax.random.key(40 + i))
+                server.ingest(sid, make_stream(rng, WINDOW_CAP))
+            for i in range(3):
+                server.close(f"g{cycle}s{i}")
+        assert server.totals["grows"] >= 3, server.totals
+        assert server.totals["shrinks"] >= 3, server.totals
+        assert _table_step._cache_size() == base
+
+    def test_wire_out_ratio_below_one(self, rng):
+        """Regression: ``wire_out_ratio`` divided outbound delta frames by
+        the (already compressed) inbound bytes, reading > 1.0 on the pieces
+        transport.  Against raw bytes it must sit below 1 for any window at
+        or past the header-amortization bound (4 B header / 4 B-per-point =
+        1 point per frame)."""
+        from repro.core.symed import symed_encode_chunk
+        from repro.core.compress import pieces_on_wire
+
+        ts = make_stream(rng, 160)
+        key = jax.random.key(77)
+        for win in (8, 16, WINDOW_CAP):  # every window >= the bound
+            server = StreamServer(CFG, max_sessions=2, window_cap=win,
+                                  digitize_every_k=1)
+            server.open("s", key=key)
+            for c in range(0, 160, win):
+                server.ingest("s", ts[c: c + win])
+            server.close("s")
+            rep = server.report(1.0)
+            assert 0.0 < rep["wire_out_ratio"] < 1.0, (win, rep)
+            assert rep["raw_bytes"] == 4.0 * 160
+
+        # the transport shape that exposed the bug: compressed-in arrivals
+        pcs = StreamServer(CFG, max_sessions=2, window_cap=WINDOW_CAP,
+                           digitize_every_k=1)
+        pcs.open("s", key=key)
+        state, off = None, 0
+        for c in range(0, 160, WINDOW_CAP):
+            w = ts[c: c + WINDOW_CAP]
+            state, ev = symed_encode_chunk(jnp.asarray(w), CFG, state)
+            eps, steps = pieces_on_wire(ev, off)
+            off += len(w)
+            pcs.ingest_pieces_many({"s": {
+                "endpoints": eps, "steps": steps, "t_seen": off,
+                "t0": float(ts[0])}})
+        pcs.close("s")
+        rep = pcs.report(1.0)
+        assert rep["wire_in_ratio"] < 1.0, rep
+        assert 0.0 < rep["wire_out_ratio"] < 1.0, rep

@@ -343,8 +343,13 @@ def test_loopback_autoscale_resizes_preserve_deltas(rng):
     seed = 9
     streams = {f"a-{i}": make_stream(rng, 96) for i in range(4)}
     sids = list(streams)
+    # shrink_patience=1: with only 4 sessions the drain gives just two
+    # low-occupancy closes, so the default patience would (correctly) hold
+    # capacity at 4.  Patience semantics are covered by the hysteresis
+    # battery in test_stream_service.py; here we want the resizes to fire
+    # so the wire-level delta streams are exercised across them.
     with _Loopback(expect_sessions=4, max_sessions=4, autoscale=True,
-                   min_slots=1) as lb:
+                   min_slots=1, shrink_patience=1) as lb:
         client = SenderClient("127.0.0.1", lb.transport.port, CFG,
                               mode="pieces")
         for sid in sids:
