@@ -7,10 +7,12 @@ the CI ``lint-analysis`` job shows findings inline on the PR diff.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import subprocess
 import sys
 from pathlib import Path
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Set
 
 from repro.analysis.engine import (
     BASELINE_NAME, DEFAULT_SWEEP, RULES, AnalysisResult, Baseline,
@@ -33,7 +35,10 @@ def build_parser() -> argparse.ArgumentParser:
         description="Repo-native static analysis for the SymED codebase: "
                     "compat routing (SL001), retrace hazards (SL002), "
                     "donation aliasing (SL003), hot-path host syncs (SL004), "
-                    "wire-protocol consistency (SL005).")
+                    "wire-protocol consistency (SL005); with --deep also "
+                    "retrace budgets (SL006), dtype discipline (SL007), and "
+                    "donation effectiveness (SL008) against what jax "
+                    "actually compiles.")
     p.add_argument("paths", nargs="*", type=Path,
                    help=f"files/directories to sweep (default: "
                         f"{'/'.join(DEFAULT_SWEEP)} under the repo root)")
@@ -45,9 +50,21 @@ def build_parser() -> argparse.ArgumentParser:
                    help=f"baseline file (default: <root>/{BASELINE_NAME})")
     p.add_argument("--no-baseline", action="store_true",
                    help="ignore the baseline: report grandfathered findings")
-    p.add_argument("--write-baseline", action="store_true",
+    p.add_argument("--write-baseline", "--update-baseline",
+                   action="store_true",
                    help="rewrite the baseline from the current findings "
-                        "(keeps existing justifications) and exit 0")
+                        "(keeps existing justifications); exits 1 listing "
+                        "any entry whose justification is still the TODO "
+                        "placeholder, so unjustified baselines cannot land")
+    p.add_argument("--deep", action="store_true",
+                   help="also run the jax-importing deep tier (SL006-SL008): "
+                        "traces/compiles every `# symlint: entry(...)` "
+                        "registration on CPU and runs the scripted drives")
+    p.add_argument("--changed", action="store_true",
+                   help="report findings only for files that differ from the "
+                        "merge-base with origin/main (plus uncommitted and "
+                        "untracked files); the whole sweep is still parsed "
+                        "so cross-file rules keep their context")
     p.add_argument("--list-rules", action="store_true")
     p.add_argument("--show-baselined", action="store_true",
                    help="also print baselined/suppressed findings (text)")
@@ -101,6 +118,35 @@ def _emit_json(result: AnalysisResult) -> None:
     }, indent=2))
 
 
+def _changed_files(root: Path) -> Optional[Set[str]]:
+    """Repo-relative posix paths differing from the merge-base (committed,
+    uncommitted, and untracked); None when git/merge-base is unavailable."""
+
+    def git(*cmd):
+        try:
+            r = subprocess.run(["git", *cmd], cwd=root, capture_output=True,
+                               text=True, timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            return None
+        return r.stdout.strip() if r.returncode == 0 else None
+
+    base = None
+    for ref in ("origin/main", "main", "HEAD"):
+        base = git("merge-base", ref, "HEAD")
+        if base is not None:
+            break
+    if base is None:
+        return None
+    diff = git("diff", "--name-only", base, "--")
+    if diff is None:
+        return None
+    changed = {p for p in diff.splitlines() if p}
+    untracked = git("ls-files", "--others", "--exclude-standard")
+    if untracked:
+        changed |= {p for p in untracked.splitlines() if p}
+    return changed
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     import repro.analysis.rules  # noqa: F401 -- populate the registry
 
@@ -108,7 +154,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.list_rules:
         for rid in sorted(RULES):
             r = RULES[rid]
-            print(f"{r.id}  {r.name}: {r.doc}")
+            print(f"{r.id}  {r.name} [{r.tier}]: {r.doc}")
         return 0
 
     root = find_root()
@@ -137,7 +183,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     baseline = None if args.no_baseline else Baseline(baseline_path)
 
     project = load_project(root, paths)
-    result = analyze(project, rule_ids, baseline)
+    if args.deep:
+        from repro.analysis import deep
+        deep.prepare(project)
+    result = analyze(project, rule_ids, baseline, include_deep=args.deep)
+
+    if args.changed:
+        changed = _changed_files(root)
+        if changed is None:
+            print("symlint: --changed needs a git checkout with a resolvable "
+                  "merge-base", file=sys.stderr)
+            return 2
+        result = dataclasses.replace(
+            result,
+            findings=[f for f in result.findings if f.path in changed],
+            baselined=[f for f in result.baselined if f.path in changed],
+            suppressed=[f for f in result.suppressed if f.path in changed],
+            # a stale entry is an attribute of the whole baseline, not of
+            # any changed file -- full sweeps own that failure mode
+            stale_baseline=[],
+            parse_errors=[(p, e) for p, e in result.parse_errors
+                          if p in changed],
+        )
 
     if args.write_baseline:
         grandfather = result.findings + result.baselined
@@ -145,6 +212,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                            baseline.entries if baseline is not None else {})
         print(f"symlint: wrote {n} entr{'y' if n == 1 else 'ies'} to "
               f"{baseline_path}")
+        todo = Baseline.unjustified(baseline_path)
+        if todo:
+            for e in todo:
+                print(f"{e['file']}: baseline entry {e['fingerprint']} "
+                      f"({e['rule']}) still carries the placeholder "
+                      f"justification -- write a real reason or fix it")
+            print(f"symlint: {len(todo)} unjustified baseline "
+                  f"entr{'y' if len(todo) == 1 else 'ies'}", file=sys.stderr)
+            return 1
         return 0
 
     if args.fmt == "json":

@@ -1,0 +1,820 @@
+"""symlint deep tier: jaxpr-grounded verification of the perf contracts.
+
+The AST tier (SL001-SL005) pattern-matches source text; this tier checks
+what jax *actually compiles*.  Hot functions opt in with a registry
+annotation on their ``def`` (or decorator) line:
+
+    # symlint: entry(drive=stream, budget=0, shapes=table-step)
+    # symlint: entry(pair=chunk/table, shapes=pair-chunk-table)
+
+Annotation keys (any subset; comma-separated, order-free):
+
+  * ``drive=<name>``  -- the scripted workload that exercises this entry
+    (``stream``: the resident ``StreamServer`` grow/shrink/ingest cycle of
+    ``benchmarks/check_bench.py``; ``chunked``: windowed encode/receive/
+    finish passes; ``digitize``: repeated ``digitize_pieces`` calls;
+    ``fleet``: repeated ``run_fleet`` slabs).  SL006 measures how many new
+    programs the entry's jit cache gained during the drive's *measured*
+    window (everything after the declared warm-up -- for ``stream`` that is
+    server construction including the pretrace ladder).
+  * ``budget=<int>``  -- the entry's retrace budget over that measured
+    window.  The serving-loop entries declare ``budget=0``: steady state
+    must never trace.
+  * ``shapes=<builder>`` -- operand builder (a name from ``OPERANDS``, or
+    inline space-separated specs like ``f32[4,8] i32[4]`` for fixtures).
+    Entries with shapes are traced at representative configurations
+    (capacity rungs, cadences k in {1, 2}, raw + pieces) for SL007's
+    dtype/weak-type discipline scan and, when the jit declares donation,
+    compiled for SL008's input-output aliasing check.
+  * ``pair=<label>/<role>`` -- bitwise-contract pair registration, role
+    ``slot`` or ``table``.  SL007 compares the two members' output trees
+    leaf-for-leaf (dtype *and* weak type, via ``jax.eval_shape``; the slot
+    member is vmapped by its builder so the trees align): an asymmetry is
+    exactly the kind of silent upcast that breaks the per-slot == table
+    bitwise equivalence the property batteries assert numerically at a few
+    points.
+
+``entry_registry`` is pure AST (importable without jax -- the CLI uses it
+for ``--list``-style introspection); everything else lives behind
+``prepare``, which imports jax lazily (forced to CPU), resolves each entry
+to its live module attribute, runs the probes and drives once, and caches a
+``DeepContext`` on the project for the SL006-SL008 rules to read.  Probe
+and drive failures are recorded as errors and surfaced as findings by the
+owning rule -- a contract that cannot be verified is a finding, not a pass.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import importlib
+import importlib.util
+import os
+import re
+import sys
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.astutil import iter_functions
+from repro.analysis.engine import Project
+from repro.analysis.jaxinfo import jit_registry
+
+__all__ = [
+    "Entry", "DeepContext", "entry_registry", "prepare", "OPERANDS",
+    "DRIVES",
+]
+
+_ENTRY_RE = re.compile(r"symlint:\s*entry\(([^)]*)\)")
+
+#: regression budget for warning-based 64-bit detection: under the default
+#: (x64-off) config an explicit 64-bit dtype request is *truncated* with
+#: this UserWarning -- the only spoor a float64 upcast leaves in the jaxpr
+_TRUNCATE_RE = re.compile(
+    r"requested dtype.*64|truncated to dtype", re.IGNORECASE)
+
+
+def _split_args(argstr: str) -> List[str]:
+    """Split on top-level commas (inline shape specs carry ``[4,8]``)."""
+    parts, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch in "[(":
+            depth += 1
+        elif ch in "])":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+@dataclasses.dataclass
+class Entry:
+    """One ``# symlint: entry(...)`` registration (module-level def)."""
+
+    relpath: str
+    qualname: str
+    line: int
+    drive: Optional[str] = None
+    budget: int = 0
+    shapes: Optional[str] = None
+    pair_label: Optional[str] = None
+    pair_role: Optional[str] = None
+    # resolved by prepare():
+    module: object = None
+    fn: object = None
+
+    @property
+    def where(self) -> str:
+        return f"{self.relpath}:{self.qualname}"
+
+
+def _parse_entry(relpath: str, qualname: str, line: int,
+                 argstr: str) -> Tuple[Optional[Entry], Optional[str]]:
+    e = Entry(relpath=relpath, qualname=qualname, line=line)
+    for part in _split_args(argstr):
+        if "=" not in part:
+            return None, f"entry() arg {part!r} is not key=value"
+        key, _, val = part.partition("=")
+        key, val = key.strip(), val.strip()
+        if key == "drive":
+            e.drive = val
+        elif key == "budget":
+            try:
+                e.budget = int(val)
+            except ValueError:
+                return None, f"entry() budget {val!r} is not an int"
+        elif key == "shapes":
+            e.shapes = val
+        elif key == "pair":
+            label, sep, role = val.partition("/")
+            if not sep or role not in ("slot", "table"):
+                return None, (f"entry() pair {val!r} must be "
+                              f"<label>/slot or <label>/table")
+            e.pair_label, e.pair_role = label, role
+        else:
+            return None, f"entry() key {key!r} unknown"
+    if e.drive is None and e.shapes is None:
+        return None, "entry() needs at least drive= or shapes="
+    return e, None
+
+
+def entry_registry(project: Project) -> Tuple[List[Entry], List[Tuple[str, int, str]]]:
+    """All entry annotations in the sweep (pure AST; no jax import).
+
+    Returns ``(entries, errors)`` where each error is ``(relpath, line,
+    message)`` -- malformed annotations and annotations on nested defs are
+    errors, not silent skips.
+    """
+
+    def build():
+        entries: List[Entry] = []
+        errors: List[Tuple[str, int, str]] = []
+        for rel, sf in sorted(project.files.items()):
+            claimed = set()
+            for qual, node in iter_functions(sf.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                lines = [node.lineno] + [d.lineno
+                                         for d in node.decorator_list]
+                for ln in lines:
+                    m = _ENTRY_RE.search(sf.comments.get(ln, ""))
+                    if m is None:
+                        continue
+                    claimed.add(ln)
+                    if "." in qual:
+                        errors.append(
+                            (rel, ln, f"entry() on nested def {qual!r}: "
+                             "entries must be module-level"))
+                        continue
+                    e, err = _parse_entry(rel, qual, node.lineno, m.group(1))
+                    if err is not None:
+                        errors.append((rel, ln, err))
+                    else:
+                        entries.append(e)
+                    break
+            for ln, comment in sf.comments.items():
+                if ln not in claimed and _ENTRY_RE.search(comment):
+                    errors.append(
+                        (rel, ln, "entry() annotation not attached to any "
+                         "function def/decorator line"))
+        return entries, errors
+
+    return project.cache("deep_entries", build)
+
+
+# --------------------------------------------------------------------------
+# runtime context
+
+@dataclasses.dataclass
+class Probe:
+    """One traced/compiled call configuration of an entry."""
+
+    tag: str            # pair-matching key ("k=1", "span", ...)
+    fn: object          # callable to trace (slot pairs: vmapped wrapper)
+    args: tuple
+    kwargs: dict
+    direct: bool        # fn IS the entry attribute (lower()-able if jitted)
+
+
+@dataclasses.dataclass
+class TraceReport:
+    entry: Entry
+    tag: str
+    warnings_64: List[str]
+    jaxpr_64: List[str]          # 64-bit convert/output dtypes in the jaxpr
+    out_shape: object = None     # eval_shape result (pair comparison)
+
+
+@dataclasses.dataclass
+class PairReport:
+    label: str
+    tag: str
+    slot: Entry
+    table: Entry
+    mismatches: List[str]        # "leaf: slot=f32 table=f64(weak)" strings
+
+
+@dataclasses.dataclass
+class DonationReport:
+    entry: Entry
+    tag: str
+    aliased: bool                # input_output_alias present in executable
+    dropped_warning: Optional[str]
+
+
+@dataclasses.dataclass
+class DeepContext:
+    entries: List[Entry]
+    traces: List[TraceReport]
+    pairs: List[PairReport]
+    donations: List[DonationReport]
+    drives: Dict[str, Dict[str, int]]   # drive -> qualname -> new compiles
+    errors: List[Tuple[str, Optional[Entry], str]]  # (stage, entry, message)
+
+
+class _Rt:
+    """Lazy jax namespace handed to builders and drives."""
+
+    def __init__(self):
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        self.jax, self.jnp, self.np = jax, jnp, np
+
+    def small_cfg(self, mod):
+        """Representative config, sized so tracing stays in seconds."""
+        return mod.SymEDConfig(tol=0.5, alpha=0.02, scl=1.0, k_min=3,
+                               k_max=8, len_max=16, n_max=32, lloyd_iters=2)
+
+
+# --------------------------------------------------------------------------
+# operand builders
+#
+# Each builder returns the probe list for one entry: tiny-but-representative
+# shapes, cadences k in {1, 2} where the cadence is part of the contract.
+# Builders pull constructors off the *entry's own module* (``receiver_init``
+# etc. are imported there), so a test sweeping a mutated copy of a repo file
+# probes the copy, not the installed module.
+
+_S, _C, _P, _NMAX = 2, 8, 4, 32
+
+
+def _b_table_step(rt, mod, fn):
+    cfg = rt.small_cfg(mod)
+    tab = rt.jax.vmap(lambda k: mod.receiver_init(cfg, k))(
+        rt.jax.random.split(rt.jax.random.key(0), _S))
+    w = rt.jnp.zeros((_S, _C), rt.jnp.float32)
+    nv = rt.jnp.full((_S,), _C, rt.jnp.int32)
+    return [Probe(f"k={k}", fn, (tab, w, nv),
+                  dict(cfg=cfg, digitize_every_k=k, use_kernel=False), True)
+            for k in (1, 2)]
+
+
+def _b_table_step_pieces(rt, mod, fn):
+    cfg = rt.small_cfg(mod)
+    tab = rt.jax.vmap(lambda k: mod.receiver_init(cfg, k))(
+        rt.jax.random.split(rt.jax.random.key(0), _S))
+    pe = rt.jnp.zeros((_S, _C), rt.jnp.float32)
+    ps = rt.jnp.zeros((_S, _C), rt.jnp.int32)
+    nv = rt.jnp.full((_S,), _P, rt.jnp.int32)
+    hello = rt.jnp.zeros((_S,), rt.jnp.float32)
+    tsn = rt.jnp.full((_S,), _C, rt.jnp.int32)
+    return [Probe(f"k={k}", fn, (tab, pe, ps, nv, hello, tsn),
+                  dict(cfg=cfg, digitize_every_k=k, use_kernel=False), True)
+            for k in (1, 2)]
+
+
+def _pair_state(rt, mod):
+    cfg = rt.small_cfg(mod)
+    tab = rt.jax.vmap(lambda k: mod.receiver_init(cfg, k))(
+        rt.jax.random.split(rt.jax.random.key(0), _S))
+    return cfg, tab
+
+
+def _b_pair_chunk_slot(rt, mod, fn):
+    cfg, tab = _pair_state(rt, mod)
+    w = rt.jnp.zeros((_S, _C), rt.jnp.float32)
+    nv = rt.jnp.full((_S,), _C, rt.jnp.int32)
+    return [Probe(
+        f"k={k}",
+        rt.jax.vmap(lambda w1, n1, s1, _k=k: fn(
+            w1, n1, cfg, s1, digitize_every_k=_k)),
+        (w, nv, tab), {}, False) for k in (1, 2)]
+
+
+def _b_pair_chunk_table(rt, mod, fn):
+    cfg, tab = _pair_state(rt, mod)
+    w = rt.jnp.zeros((_S, _C), rt.jnp.float32)
+    nv = rt.jnp.full((_S,), _C, rt.jnp.int32)
+    return [Probe(
+        f"k={k}",
+        lambda w1, n1, t1, _k=k: fn(w1, n1, cfg, t1, digitize_every_k=_k),
+        (w, nv, tab), {}, False) for k in (1, 2)]
+
+
+def _pieces_operands(rt):
+    pe = rt.jnp.zeros((_S, _P), rt.jnp.float32)
+    ps = rt.jnp.zeros((_S, _P), rt.jnp.int32)
+    nv = rt.jnp.full((_S,), _P, rt.jnp.int32)
+    hello = rt.jnp.zeros((_S,), rt.jnp.float32)
+    tsn = rt.jnp.full((_S,), _C, rt.jnp.int32)
+    return pe, ps, nv, hello, tsn
+
+
+def _b_pair_pieces_slot(rt, mod, fn):
+    cfg, tab = _pair_state(rt, mod)
+    ops = _pieces_operands(rt)
+    return [Probe(
+        f"k={k}",
+        rt.jax.vmap(lambda a, b, c, d, e, s1, _k=k: fn(
+            a, b, c, d, e, cfg, s1, digitize_every_k=_k)),
+        ops + (tab,), {}, False) for k in (1, 2)]
+
+
+def _b_pair_pieces_table(rt, mod, fn):
+    cfg, tab = _pair_state(rt, mod)
+    ops = _pieces_operands(rt)
+    return [Probe(
+        f"k={k}",
+        lambda a, b, c, d, e, t1, _k=k: fn(
+            a, b, c, d, e, cfg, t1, digitize_every_k=_k),
+        ops + (tab,), {}, False) for k in (1, 2)]
+
+
+def _span_operands(rt, mod):
+    dst = rt.jax.vmap(lambda k: mod.digitizer_init(_NMAX, 8, k))(
+        rt.jax.random.split(rt.jax.random.key(0), _S))
+    lens = rt.jnp.zeros((_S, _NMAX), rt.jnp.float32)
+    incs = rt.jnp.zeros((_S, _NMAX), rt.jnp.float32)
+    lo = rt.jnp.zeros((_S,), rt.jnp.int32)
+    hi = rt.jnp.full((_S,), _P, rt.jnp.int32)
+    return dst, lens, incs, lo, hi
+
+
+_SPAN_KW = dict(tol=0.5, scl=1.0, k_min=3, k_max_active=8, lloyd_iters=2)
+
+
+def _b_pair_span_slot(rt, mod, fn):
+    ops = _span_operands(rt, mod)
+    return [Probe(
+        "span",
+        rt.jax.vmap(lambda s1, l1, i1, lo1, hi1: fn(
+            s1, l1, i1, lo1, hi1, **_SPAN_KW)),
+        ops, {}, False)]
+
+
+def _b_pair_span_table(rt, mod, fn):
+    ops = _span_operands(rt, mod)
+    return [Probe("span", lambda *a: fn(*a, **_SPAN_KW), ops, {}, False)]
+
+
+def _b_digitize_pieces(rt, mod, fn):
+    lens = rt.jnp.zeros((_NMAX,), rt.jnp.float32)
+    incs = rt.jnp.zeros((_NMAX,), rt.jnp.float32)
+    n = rt.jnp.asarray(_P, rt.jnp.int32)
+    key = rt.jax.random.key(0)
+    return [Probe("pieces", fn, (lens, incs, n, key),
+                  dict(k_cap=8, tol=0.5, scl=1.0, k_min=3, k_max_active=8,
+                       lloyd_iters=2), True)]
+
+
+def _b_encode_chunk(rt, mod, fn):
+    chunk = rt.jnp.zeros((_C,), rt.jnp.float32)
+    return [Probe("first", fn, (chunk, None),
+                  dict(tol=0.5, alpha=0.02, len_max=16, first=True), True)]
+
+
+def _b_receive_chunk(rt, mod, fn):
+    chunk = rt.jnp.zeros((_C,), rt.jnp.float32)
+    key = rt.jax.random.key(0)
+    return [Probe(f"k={k}", fn, (chunk, None, key),
+                  dict(tol=0.5, alpha=0.02, scl=1.0, len_max=16, n_max=_NMAX,
+                       k_min=3, k_max=8, lloyd_iters=2, digitize_every_k=k,
+                       first=True), True) for k in (1, 2)]
+
+
+def _b_receive_finish(rt, mod, fn):
+    cfg = rt.small_cfg(mod)
+    state = mod.receiver_init(cfg, rt.jax.random.key(0))
+    ts = rt.jnp.zeros((1,), rt.jnp.float32)
+    return [Probe("finish", fn, (state, ts),
+                  dict(tol=0.5, scl=1.0, n_max=_NMAX, k_min=3, k_max=8,
+                       lloyd_iters=2, reconstruct=False, with_delta=True),
+                  True)]
+
+
+OPERANDS: Dict[str, Callable] = {
+    "table-step": _b_table_step,
+    "table-step-pieces": _b_table_step_pieces,
+    "pair-chunk-slot": _b_pair_chunk_slot,
+    "pair-chunk-table": _b_pair_chunk_table,
+    "pair-pieces-slot": _b_pair_pieces_slot,
+    "pair-pieces-table": _b_pair_pieces_table,
+    "pair-span-slot": _b_pair_span_slot,
+    "pair-span-table": _b_pair_span_table,
+    "digitize-pieces": _b_digitize_pieces,
+    "encode-chunk": _b_encode_chunk,
+    "receive-chunk": _b_receive_chunk,
+    "receive-finish": _b_receive_finish,
+}
+
+_SPEC_RE = re.compile(r"^(f16|bf16|f32|f64|i32|i64|u32|u64|bool)"
+                      r"\[([0-9,\s]*)\]$")
+_SPEC_DTYPES = {"f16": "float16", "bf16": "bfloat16", "f32": "float32",
+                "f64": "float64", "i32": "int32", "i64": "int64",
+                "u32": "uint32", "u64": "uint64", "bool": "bool"}
+
+
+def _inline_probes(rt, fn, spec: str) -> List[Probe]:
+    """``shapes=f32[4,8] i32[4]`` -> one probe with zero-filled operands."""
+    args = []
+    for tok in spec.split():
+        m = _SPEC_RE.match(tok)
+        if m is None:
+            raise ValueError(f"bad inline shape spec {tok!r}")
+        shape = tuple(int(d) for d in m.group(2).replace(" ", "").split(",")
+                      if d)
+        args.append(rt.jnp.zeros(shape, _SPEC_DTYPES[m.group(1)]))
+    return [Probe("inline", fn, tuple(args), {}, True)]
+
+
+# --------------------------------------------------------------------------
+# drives (SL006): warm up, snapshot each entry's jit cache, run the
+# measured script, report the delta
+
+def _cache_sizes(entries):
+    return {e.qualname: e.fn._cache_size() for e in entries}
+
+
+def _drive_stream(rt, entries) -> Dict[str, int]:
+    """The check_bench cache-flatness script, generalized: a pretrace-warmed
+    autoscaled server (capacity ladder 1 -> 2) serves two grow/shrink
+    cycles of mixed raw + pieces sessions; the measured window starts after
+    construction, so deleting the pretrace warm-up makes the first ingest
+    compile inside the window."""
+    mod = entries[0].module
+    cfg = rt.small_cfg(mod)
+    srv = mod.StreamServer(cfg, max_sessions=2, window_cap=_C,
+                           autoscale=True, min_slots=1, shrink_patience=1,
+                           pretrace=True)
+    base = _cache_sizes(entries)
+    rng = rt.np.random.default_rng(0)
+    for cycle in range(2):
+        raw, pcs = f"r{cycle}", f"p{cycle}"
+        srv.open(raw)
+        srv.open(pcs)  # 1 -> 2 slots: grow
+        srv.ingest(raw, rng.normal(size=_C).astype(rt.np.float32))
+        srv.ingest_pieces_many({pcs: {
+            "endpoints": rng.normal(size=3).astype(rt.np.float32),
+            "steps": rt.np.array([2, 5, 7], rt.np.int32),
+            "t_seen": _C, "t0": 0.0,
+        }})
+        srv.close(raw)
+        srv.close(pcs)  # back to 1 slot: shrink
+    return {q: _cache_sizes(entries)[q] - base[q] for q in base}
+
+
+def _drive_chunked(rt, entries) -> Dict[str, int]:
+    """Windowed encode -> finish and receive -> finish passes at cadences
+    k in {1, 2}; warm-up is one full pass, the measured window a second
+    pass over different data at the same shapes."""
+    mod = entries[0].module
+    cfg = rt.small_cfg(mod)
+    key = rt.jax.random.key(0)
+
+    def one_pass(seed):
+        rng = rt.np.random.default_rng(seed)
+        ts = rng.normal(size=4 * _C).astype(rt.np.float32)
+        for k in (1, 2):
+            st, evs = None, []
+            for i in range(0, len(ts), _C):
+                st, ev = mod.symed_encode_chunk(ts[i:i + _C], cfg, st)
+                evs.append(ev)
+            events = {name: rt.jnp.concatenate([e[name] for e in evs],
+                                               axis=-1) for name in evs[0]}
+            mod.symed_finish(events, st, cfg, key, ts)
+            rs = None
+            for i in range(0, len(ts), _C):
+                rs, _ = mod.symed_receive_chunk(ts[i:i + _C], cfg, rs, key,
+                                                digitize_every_k=k)
+            mod.symed_receive_finish(rs, cfg, None, False, with_delta=True)
+
+    one_pass(0)
+    base = _cache_sizes(entries)
+    one_pass(1)
+    return {q: _cache_sizes(entries)[q] - base[q] for q in base}
+
+
+def _drive_digitize(rt, entries) -> Dict[str, int]:
+    mod = entries[0].module
+    key = rt.jax.random.key(0)
+
+    def call(seed):
+        rng = rt.np.random.default_rng(seed)
+        lens = rt.np.abs(rng.normal(size=_NMAX)).astype(rt.np.float32)
+        incs = rng.normal(size=_NMAX).astype(rt.np.float32)
+        mod.digitize_pieces(lens, incs, rt.jnp.asarray(6, rt.jnp.int32), key,
+                            k_cap=8, tol=0.5, scl=1.0, k_min=3,
+                            k_max_active=8, lloyd_iters=2)
+
+    call(0)
+    base = _cache_sizes(entries)
+    call(1)
+    return {q: _cache_sizes(entries)[q] - base[q] for q in base}
+
+
+def _drive_fleet(rt, entries) -> Dict[str, int]:
+    """Two same-shape ``run_fleet`` slabs; the lru-cached shard_map runner
+    must serve the second from its jit cache (repeat fleet runs pay
+    trace+compile once per configuration)."""
+    mod = entries[0].module
+    cfg = rt.small_cfg(mod)
+    mesh = mod.fleet_data_mesh(1)
+    rng = rt.np.random.default_rng(0)
+
+    def run(seed):
+        data = rng.normal(size=(_S, 4 * _C)).astype(rt.np.float32)
+        mod.run_fleet(data, cfg, rt.jax.random.key(seed), mesh,
+                      chunk_len=_C, digitize_every_k=1, reconstruct=False,
+                      axis="data")
+
+    run(0)
+    # the lru_cache returns the same jitted runner for this configuration
+    runner = mod._mapped_runner(mesh, ("data",), cfg, _C, 1, False)
+    base = runner._cache_size()
+    run(1)
+    delta = runner._cache_size() - base
+    return {e.qualname: delta for e in entries}
+
+
+DRIVES: Dict[str, Callable] = {
+    "stream": _drive_stream,
+    "chunked": _drive_chunked,
+    "digitize": _drive_digitize,
+    "fleet": _drive_fleet,
+}
+
+
+# --------------------------------------------------------------------------
+# jaxpr / executable inspection
+
+def _scan_jaxpr_64(jaxpr, hits) -> None:
+    """Collect 64-bit float/complex conversions and outputs, recursively.
+
+    Under the default x64-off config these *cannot* appear (requests are
+    truncated, with a warning we capture separately); the scan keeps the
+    rule honest if the tier ever runs under ``jax_enable_x64``."""
+    import numpy as np
+
+    def wide(dt) -> bool:
+        try:
+            dt = np.dtype(dt)
+        except TypeError:
+            # extended dtypes (PRNG keys) are 8 bytes but never float64
+            return False
+        return dt.kind in "fc" and dt.itemsize == 8
+
+    for v in jaxpr.outvars:
+        dt = getattr(getattr(v, "aval", None), "dtype", None)
+        if dt is not None and wide(dt):
+            hits.add(f"output {dt}")
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type":
+            dt = eqn.params.get("new_dtype")
+            if wide(dt):
+                hits.add(f"convert_element_type -> {dt}")
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else (p,)):
+                name = type(sub).__name__
+                if name == "ClosedJaxpr":
+                    _scan_jaxpr_64(sub.jaxpr, hits)
+                elif name == "Jaxpr":
+                    _scan_jaxpr_64(sub, hits)
+
+
+def _leaf_sig(rt, tree) -> List[Tuple[str, str]]:
+    flat = rt.jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        weak = " (weak)" if getattr(leaf, "weak_type", False) else ""
+        out.append((rt.jax.tree_util.keystr(path), f"{leaf.dtype}{weak}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# module resolution
+
+def _load_module(root, relpath: str):
+    """Repo files import as ``repro.*`` (so jitted module attrs are the real
+    live objects); anything else (test fixtures) loads from its file path
+    under a content-hashed synthetic name."""
+    if relpath.startswith("src/") and relpath.endswith(".py"):
+        mod_name = relpath[len("src/"):-len(".py")].replace("/", ".")
+        if mod_name.endswith(".__init__"):
+            mod_name = mod_name[:-len(".__init__")]
+        return importlib.import_module(mod_name)
+    path = root / relpath
+    digest = hashlib.sha1(path.read_bytes()).hexdigest()[:12]
+    name = f"_symlint_deep_{digest}"
+    if name in sys.modules:
+        return sys.modules[name]
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    # registered before exec: dataclass/typing machinery in the loaded file
+    # looks itself up through sys.modules
+    sys.modules[name] = mod
+    try:
+        spec.loader.exec_module(mod)
+    except BaseException:
+        sys.modules.pop(name, None)
+        raise
+    return mod
+
+
+# --------------------------------------------------------------------------
+# prepare
+
+def prepare(project: Project) -> DeepContext:
+    """Resolve, trace, compile, and drive every registered entry (cached).
+
+    Must run before ``analyze(..., include_deep=True)``; the SL006-SL008
+    rules read the returned context off ``project._caches['deep']``.
+    """
+
+    def build() -> DeepContext:
+        entries, reg_errors = entry_registry(project)
+        errors: List[Tuple[str, Optional[Entry], str]] = [
+            ("registry", Entry(relpath=rel, qualname="", line=ln), msg)
+            for rel, ln, msg in reg_errors]
+        rt = _Rt()
+
+        resolved: List[Entry] = []
+        for e in entries:
+            try:
+                e.module = _load_module(project.root, e.relpath)
+                e.fn = getattr(e.module, e.qualname)
+            except Exception as exc:  # noqa: BLE001 -- surfaced as finding
+                errors.append(("resolve", e, f"{type(exc).__name__}: {exc}"))
+                continue
+            resolved.append(e)
+
+        # -- probes: trace + warning capture + pair shapes ------------------
+        traces: List[TraceReport] = []
+        probe_lists: Dict[Tuple[str, str], List[Probe]] = {}
+        jits = jit_registry(project)
+        for e in resolved:
+            if e.shapes is None:
+                continue
+            try:
+                if e.shapes in OPERANDS:
+                    probes = OPERANDS[e.shapes](rt, e.module, e.fn)
+                else:
+                    probes = _inline_probes(rt, e.fn, e.shapes)
+            except Exception as exc:  # noqa: BLE001
+                errors.append(("operands", e,
+                               f"{type(exc).__name__}: {exc}"))
+                continue
+            probe_lists[(e.relpath, e.qualname)] = probes
+            for probe in probes:
+                # jitted entries must trace through their own wrapper:
+                # make_jaxpr/eval_shape know nothing of static_argnames and
+                # would feed tracers into the static parameters
+                jitted = probe.direct and hasattr(probe.fn, "trace")
+                try:
+                    with warnings.catch_warnings(record=True) as ws:
+                        warnings.simplefilter("always")
+                        if jitted:
+                            closed = probe.fn.trace(
+                                *probe.args, **probe.kwargs).jaxpr
+                            out_shape = probe.fn.eval_shape(
+                                *probe.args, **probe.kwargs)
+                        else:
+                            closed = rt.jax.make_jaxpr(probe.fn)(
+                                *probe.args, **probe.kwargs)
+                            out_shape = rt.jax.eval_shape(
+                                probe.fn, *probe.args, **probe.kwargs)
+                except Exception as exc:  # noqa: BLE001
+                    errors.append(
+                        ("trace", e, f"[{probe.tag}] "
+                         f"{type(exc).__name__}: {exc}"))
+                    continue
+                w64 = sorted({str(w.message) for w in ws
+                              if _TRUNCATE_RE.search(str(w.message))})
+                hits: set = set()
+                _scan_jaxpr_64(closed.jaxpr, hits)
+                traces.append(TraceReport(
+                    entry=e, tag=probe.tag, warnings_64=w64,
+                    jaxpr_64=sorted(hits), out_shape=out_shape))
+
+        # -- pairs: leaf-for-leaf dtype/weak-type comparison ----------------
+        pairs: List[PairReport] = []
+        by_label: Dict[str, Dict[str, Entry]] = {}
+        for e in resolved:
+            if e.pair_label is not None:
+                by_label.setdefault(e.pair_label, {})[e.pair_role] = e
+        shape_of = {(t.entry.relpath, t.entry.qualname, t.tag): t.out_shape
+                    for t in traces}
+        for label, roles in sorted(by_label.items()):
+            if set(roles) != {"slot", "table"}:
+                only = next(iter(roles.values()))
+                errors.append(("pair", only,
+                               f"pair {label!r} is missing its "
+                               f"{'table' if 'slot' in roles else 'slot'} "
+                               "member"))
+                continue
+            slot, table = roles["slot"], roles["table"]
+            slot_probes = probe_lists.get((slot.relpath, slot.qualname), [])
+            for probe in slot_probes:
+                a = shape_of.get((slot.relpath, slot.qualname, probe.tag))
+                b = shape_of.get((table.relpath, table.qualname, probe.tag))
+                if a is None or b is None:
+                    continue  # trace already failed; error recorded above
+                sa, sb = _leaf_sig(rt, a), _leaf_sig(rt, b)
+                if [x[0] for x in sa] != [x[0] for x in sb]:
+                    mism = ["output tree structures differ"]
+                else:
+                    mism = [f"{pa}: slot={da} table={db}"
+                            for (pa, da), (_, db) in zip(sa, sb) if da != db]
+                pairs.append(PairReport(label=label, tag=probe.tag,
+                                        slot=slot, table=table,
+                                        mismatches=mism))
+
+        # -- donation: lower + compile, check the executable aliases --------
+        donations: List[DonationReport] = []
+        for e in resolved:
+            probes = probe_lists.get((e.relpath, e.qualname), [])
+            spec = next((s for s in jits.get(e.qualname, [])
+                         if s.relpath == e.relpath), None)
+            declared = spec is not None and spec.donated_positions()
+            if not declared:
+                continue
+            for probe in probes:
+                if not probe.direct:
+                    continue
+                try:
+                    with warnings.catch_warnings(record=True) as ws:
+                        warnings.simplefilter("always")
+                        compiled = probe.fn.lower(
+                            *probe.args, **probe.kwargs).compile()
+                        text = compiled.as_text()
+                except Exception as exc:  # noqa: BLE001
+                    errors.append(
+                        ("compile", e, f"[{probe.tag}] "
+                         f"{type(exc).__name__}: {exc}"))
+                    continue
+                dropped = next(
+                    (str(w.message) for w in ws
+                     if "donated" in str(w.message).lower()), None)
+                donations.append(DonationReport(
+                    entry=e, tag=probe.tag,
+                    aliased="input_output_alias" in text,
+                    dropped_warning=dropped))
+
+        # -- drives: warm-up, snapshot, measured window ---------------------
+        drive_results: Dict[str, Dict[str, int]] = {}
+        by_drive: Dict[str, List[Entry]] = {}
+        for e in resolved:
+            if e.drive is not None:
+                by_drive.setdefault(e.drive, []).append(e)
+        for name, group in sorted(by_drive.items()):
+            fn = DRIVES.get(name)
+            if fn is None:
+                for e in group:
+                    errors.append(("drive", e, f"unknown drive {name!r}"))
+                continue
+            missing = [e for e in group
+                       if not hasattr(e.fn, "_cache_size")
+                       and name != "fleet"]
+            if missing:
+                for e in missing:
+                    errors.append(
+                        ("drive", e, "entry is not a jitted callable "
+                         "(no _cache_size); budget cannot be measured"))
+                continue
+            if len({id(e.module) for e in group}) != 1:
+                for e in group:
+                    errors.append(
+                        ("drive", e, f"drive {name!r} spans multiple "
+                         "modules; entries of one drive must share one"))
+                continue
+            try:
+                drive_results[name] = fn(rt, group)
+            except Exception as exc:  # noqa: BLE001
+                for e in group:
+                    errors.append(("drive", e,
+                                   f"{type(exc).__name__}: {exc}"))
+        return DeepContext(entries=resolved, traces=traces, pairs=pairs,
+                           donations=donations, drives=drive_results,
+                           errors=errors)
+
+    return project.cache("deep", build)
+
+
+def context(project: Project) -> Optional[DeepContext]:
+    """The prepared context, or None when ``prepare`` has not run."""
+    return project._caches.get("deep")

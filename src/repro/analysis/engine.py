@@ -30,12 +30,15 @@ from repro.analysis.astutil import line_comments
 __all__ = [
     "Finding", "Rule", "RULES", "register", "SourceFile", "Project",
     "Baseline", "AnalysisResult", "analyze", "load_project",
-    "DEFAULT_SWEEP", "BASELINE_NAME",
+    "DEFAULT_SWEEP", "BASELINE_NAME", "TODO_JUSTIFICATION",
 ]
 
 #: repo-relative directories ``python -m repro.analysis`` sweeps by default
 DEFAULT_SWEEP = ("src", "examples", "benchmarks")
 BASELINE_NAME = ".symlint-baseline.json"
+#: placeholder stamped on new baseline entries; entries still carrying it
+#: are reported by ``--update-baseline`` (exit 1) so they cannot land
+TODO_JUSTIFICATION = "TODO: justify or fix"
 
 _DISABLE_RE = re.compile(r"symlint:\s*disable(?:=([A-Za-z0-9_,\s]+))?")
 
@@ -74,18 +77,20 @@ class Rule:
     name: str
     doc: str
     check: Callable[["Project"], Iterable[Finding]]
+    tier: str = "ast"    # "ast": pure-interpreter; "deep": needs jax (SL006+)
 
 
 RULES: Dict[str, Rule] = {}
 
 
-def register(rule_id: str, name: str, doc: str):
+def register(rule_id: str, name: str, doc: str, tier: str = "ast"):
     """Decorator: register ``check(project) -> Iterable[Finding]`` as a rule."""
 
     def wrap(fn):
         if rule_id in RULES:
             raise ValueError(f"duplicate rule id {rule_id}")
-        RULES[rule_id] = Rule(id=rule_id, name=name, doc=doc, check=fn)
+        RULES[rule_id] = Rule(id=rule_id, name=name, doc=doc, check=fn,
+                              tier=tier)
         return fn
 
     return wrap
@@ -208,11 +213,25 @@ class Baseline:
                 "line": f.line,  # informational only; matching is by hash
                 "message": f.message,
                 "justification": prev.get(
-                    "justification", "TODO: justify or fix"),
+                    "justification", TODO_JUSTIFICATION),
             })
         path.write_text(json.dumps(
             {"version": 1, "entries": entries}, indent=2) + "\n")
         return len(entries)
+
+    @staticmethod
+    def unjustified(path: Path) -> List[dict]:
+        """Entries in the written baseline whose justification is still the
+        TODO placeholder.  ``--update-baseline`` refuses (exit 1) while any
+        exist: a grandfathered finding without a written reason is exactly
+        the review debt the baseline exists to prevent.  Reading an old
+        baseline stays lenient -- only (re)writing one enforces this."""
+        if not path.exists():
+            return []
+        doc = json.loads(path.read_text())
+        return [e for e in doc.get("entries", [])
+                if e.get("justification", TODO_JUSTIFICATION).strip()
+                == TODO_JUSTIFICATION]
 
 
 @dataclasses.dataclass
@@ -233,11 +252,24 @@ def analyze(
     project: Project,
     rule_ids: Optional[Sequence[str]] = None,
     baseline: Optional[Baseline] = None,
+    *,
+    include_deep: bool = False,
 ) -> AnalysisResult:
-    """Run the selected rules over ``project`` and partition the findings."""
+    """Run the selected rules over ``project`` and partition the findings.
+
+    By default only the pure-AST tier runs; ``include_deep=True`` adds the
+    jax-importing rules (the caller must have run ``deep.prepare(project)``
+    first -- deep rules read the prepared context off the project cache and
+    report nothing when it is absent).  An explicit ``rule_ids`` overrides
+    the tier filter either way.
+    """
     import repro.analysis.rules  # noqa: F401  -- populates RULES on import
 
-    ids = sorted(RULES) if rule_ids is None else list(rule_ids)
+    if rule_ids is None:
+        ids = [r for r in sorted(RULES)
+               if include_deep or RULES[r].tier == "ast"]
+    else:
+        ids = list(rule_ids)
     unknown = [r for r in ids if r not in RULES]
     if unknown:
         raise ValueError(

@@ -1,4 +1,10 @@
-"""symlint rule modules -- importing this package populates the registry."""
+"""symlint rule modules -- importing this package populates the registry.
+
+The deep-tier modules (retrace_budget, dtype_discipline, donation_effect)
+register here too but import jax only inside ``deep.prepare`` -- importing
+this package never pulls in jax, so the AST tier stays interpreter-only.
+"""
 from repro.analysis.rules import (  # noqa: F401
-    compat, donation, hostsync, retrace, wire,
+    compat, donation, donation_effect, dtype_discipline, hostsync, retrace,
+    retrace_budget, wire,
 )

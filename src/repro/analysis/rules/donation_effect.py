@@ -1,0 +1,57 @@
+"""SL008 donation-effectiveness: declared donation must actually alias.
+
+``donate_argnums`` is a *request*: XLA drops it silently when the donated
+input's shape/dtype/layout matches no output, and the only runtime spoor is
+a UserWarning ("Some donated buffers were not usable").  On an edge node a
+dropped donation doubles the resident table's memory high-water mark, so it
+is a finding, not a nit.  For every registered entry whose jit declares
+donation (per the AST jit registry), each representative probe is lowered
+and compiled and the executable is checked for an ``input_output_alias``
+annotation; a dropped-donation warning during compilation is reported with
+the compiler's own message.
+
+Deep tier -- silent when ``deep.prepare(project)`` has not run; compile
+failures on a donation-declaring entry are findings.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from repro.analysis.engine import Finding, Project, register
+from repro.analysis import deep
+
+RULE = "SL008"
+
+_OWNED_STAGES = ("compile",)
+
+
+@register(
+    RULE, "donation-effectiveness",
+    "A jitted entry declares donate_argnums but the compiled executable "
+    "does not input-output-alias the donated operand (donation silently "
+    "dropped).",
+    tier="deep",
+)
+def check(project: Project) -> Iterable[Finding]:
+    ctx = deep.context(project)
+    if ctx is None:
+        return []
+    findings: List[Finding] = []
+    for stage, entry, msg in ctx.errors:
+        if stage not in _OWNED_STAGES:
+            continue
+        findings.append(Finding(
+            rule=RULE, path=entry.relpath, line=entry.line or 1, col=0,
+            context=entry.qualname,
+            message=f"deep-tier {stage} failed for this entry: {msg}"))
+    for d in ctx.donations:
+        if d.aliased and d.dropped_warning is None:
+            continue
+        detail = (d.dropped_warning if d.dropped_warning is not None
+                  else "no input_output_alias in the compiled executable")
+        findings.append(Finding(
+            rule=RULE, path=d.entry.relpath, line=d.entry.line, col=0,
+            context=d.entry.qualname,
+            message=(f"donation declared on `{d.entry.qualname}` [{d.tag}] "
+                     f"was not honored by the compiler: {detail}")))
+    return findings

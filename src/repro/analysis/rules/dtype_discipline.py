@@ -1,0 +1,73 @@
+"""SL007 dtype-discipline: no 64-bit leaks, no slot/table dtype asymmetry.
+
+Two jaxpr-grounded checks on every traced entry:
+
+  * **64-bit leak** -- tracing must not request a float64/complex128 dtype.
+    Under the repo's default (x64-off) config such a request is truncated
+    with a UserWarning, which we capture; the jaxpr itself is also scanned
+    for 64-bit ``convert_element_type`` targets and outputs so the rule
+    stays honest if the tier ever runs under ``jax_enable_x64``.
+  * **pair asymmetry** -- entries registered as ``pair=<label>/slot`` and
+    ``pair=<label>/table`` must produce leaf-for-leaf identical output
+    dtypes *and* weak types (slot member vmapped so the trees align).  An
+    asymmetry is a silent upcast that breaks the bitwise per-slot == table
+    contract the property batteries assert numerically.
+
+Deep tier -- silent when ``deep.prepare(project)`` has not run; trace and
+pair-construction failures are findings (an unverifiable contract is not a
+pass).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from repro.analysis.engine import Finding, Project, register
+from repro.analysis import deep
+
+RULE = "SL007"
+
+_OWNED_STAGES = ("operands", "trace", "pair")
+
+
+@register(
+    RULE, "dtype-discipline",
+    "A traced entry requested a 64-bit dtype, or a registered slot/table "
+    "pair's output trees disagree on dtype or weak type.",
+    tier="deep",
+)
+def check(project: Project) -> Iterable[Finding]:
+    ctx = deep.context(project)
+    if ctx is None:
+        return []
+    findings: List[Finding] = []
+    for stage, entry, msg in ctx.errors:
+        if stage not in _OWNED_STAGES:
+            continue
+        findings.append(Finding(
+            rule=RULE, path=entry.relpath, line=entry.line or 1, col=0,
+            context=entry.qualname,
+            message=f"deep-tier {stage} failed for this entry: {msg}"))
+    for t in ctx.traces:
+        if t.warnings_64:
+            findings.append(Finding(
+                rule=RULE, path=t.entry.relpath, line=t.entry.line, col=0,
+                context=t.entry.qualname,
+                message=(f"tracing `{t.entry.qualname}` [{t.tag}] requested "
+                         f"a 64-bit dtype (truncated under the default "
+                         f"x64-off config): {t.warnings_64[0]}")))
+        if t.jaxpr_64:
+            findings.append(Finding(
+                rule=RULE, path=t.entry.relpath, line=t.entry.line, col=0,
+                context=t.entry.qualname,
+                message=(f"jaxpr of `{t.entry.qualname}` [{t.tag}] contains "
+                         f"64-bit values: {', '.join(t.jaxpr_64)}")))
+    for p in ctx.pairs:
+        if not p.mismatches:
+            continue
+        shown = "; ".join(p.mismatches[:4])
+        findings.append(Finding(
+            rule=RULE, path=p.table.relpath, line=p.table.line, col=0,
+            context=p.table.qualname,
+            message=(f"pair `{p.label}` [{p.tag}]: per-slot and table "
+                     f"output trees disagree on dtype/weak-type -- {shown}")))
+    return findings

@@ -1,0 +1,59 @@
+"""SL006 retrace-budget: entries must not compile past their declared budget.
+
+Generalizes ``benchmarks/check_bench.py``'s cache-flatness assertion into the
+linter: every ``# symlint: entry(drive=..., budget=N)`` function is exercised
+by its scripted drive (grow/shrink/ingest cycles for the stream server,
+repeated same-shape passes for the chunked/digitize/fleet paths) after a
+declared warm-up, and the number of *new* programs its jit cache gained
+during the measured window must be <= the budget.  The serving-loop entries
+declare ``budget=0``: steady state never traces.
+
+Deep tier -- requires ``deep.prepare(project)`` to have run; silent when it
+has not (the AST tier must stay importable and runnable without jax).
+Preparation failures that make the budget unmeasurable (unresolvable entry,
+crashed drive, malformed annotation) are findings, not passes.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from repro.analysis.engine import Finding, Project, register
+from repro.analysis import deep
+
+RULE = "SL006"
+
+_OWNED_STAGES = ("registry", "resolve", "drive")
+
+
+@register(
+    RULE, "retrace-budget",
+    "A registered entry point compiled more new programs during its scripted "
+    "drive's measured window than its declared trace budget allows.",
+    tier="deep",
+)
+def check(project: Project) -> Iterable[Finding]:
+    ctx = deep.context(project)
+    if ctx is None:
+        return []
+    findings: List[Finding] = []
+    for stage, entry, msg in ctx.errors:
+        if stage not in _OWNED_STAGES:
+            continue
+        findings.append(Finding(
+            rule=RULE, path=entry.relpath, line=entry.line or 1, col=0,
+            context=entry.qualname,
+            message=f"deep-tier {stage} failed for this entry: {msg}"))
+    for e in ctx.entries:
+        if e.drive is None or e.drive not in ctx.drives:
+            continue
+        delta = ctx.drives[e.drive].get(e.qualname)
+        if delta is None or delta <= e.budget:
+            continue
+        findings.append(Finding(
+            rule=RULE, path=e.relpath, line=e.line, col=0,
+            context=e.qualname,
+            message=(f"`{e.qualname}` compiled {delta} new program(s) during "
+                     f"the `{e.drive}` drive's measured window, over its "
+                     f"declared budget of {e.budget}: the steady-state "
+                     f"serving loop is retracing")))
+    return findings

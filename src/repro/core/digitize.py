@@ -262,7 +262,9 @@ def digitizer_step(
     n_max, k_cap = state.pieces.shape[0], state.centers.shape[0]
     piece = jnp.asarray(piece, jnp.float32)
 
-    pieces = jax.lax.dynamic_update_slice(state.pieces, piece[None, :], (state.n, 0))
+    pieces = jax.lax.dynamic_update_slice(
+        state.pieces, piece[None, :], (state.n, jnp.int32(0))
+    )
     n = state.n + 1
     mask = jnp.arange(n_max) < n
 
@@ -355,7 +357,7 @@ def digitizer_delta(
     )
 
 
-def digitize_span(
+def digitize_span(  # symlint: entry(pair=span/slot, shapes=pair-span-slot)
     state: DigitizerState,
     lengths: jax.Array,
     incs: jax.Array,
@@ -469,7 +471,8 @@ def digitizer_table_step(
     piece = jnp.asarray(piece, jnp.float32)
 
     pieces = jax.vmap(
-        lambda p, pc, m: jax.lax.dynamic_update_slice(p, pc[None, :], (m, 0))
+        lambda p, pc, m: jax.lax.dynamic_update_slice(
+            p, pc[None, :], (m, jnp.int32(0)))
     )(state.pieces, piece, state.n)
     n = state.n + 1                                           # (S,)
     mask = jnp.arange(n_max)[None, :] < n[:, None]            # (S, n_max)
@@ -520,7 +523,7 @@ def digitizer_table_step(
                 coords, (n - 1)[:, None, None], axis=1)[:, 0]  # (S, 2)
             seeded = jax.vmap(
                 lambda cc, nw, kk: jax.lax.dynamic_update_slice(
-                    cc, nw[None, :], (kk, 0))
+                    cc, nw[None, :], (kk, jnp.int32(0)))
             )(c, newest, k)
 
             # beyond that: random re-init from active pieces
@@ -553,7 +556,7 @@ def digitizer_table_step(
     return new_state, jnp.where(live, symbol, 0)
 
 
-def digitize_span_table(
+def digitize_span_table(  # symlint: entry(pair=span/table, shapes=pair-span-table)
     state: DigitizerState,
     lengths: jax.Array,
     incs: jax.Array,
@@ -623,7 +626,7 @@ def digitize_span_table(
     jax.jit,
     static_argnames=("k_cap", "k_min", "k_max_active", "lloyd_iters", "use_kernel"),
 )
-def digitize_pieces(
+def digitize_pieces(  # symlint: entry(drive=digitize, budget=0, shapes=digitize-pieces)
     lengths: jax.Array,
     incs: jax.Array,
     n_pieces: jax.Array,

@@ -166,7 +166,7 @@ def symed_encode(
 
 
 @functools.partial(jax.jit, static_argnames=("len_max", "first"))
-def _encode_chunk(chunk, state, *, tol, alpha, len_max, first):
+def _encode_chunk(chunk, state, *, tol, alpha, len_max, first):  # symlint: entry(drive=chunked, budget=0, shapes=encode-chunk)
     chunk = jnp.asarray(chunk, jnp.float32)
     ts_t = jnp.moveaxis(chunk, -1, 0)
     if first:
@@ -364,7 +364,7 @@ def _symbol_delta_info(n_dig_prev, dig, symbols_online, endpoints, emitted):
         "digitize_every_k", "first",
     ),
 )
-def _receive_chunk(
+def _receive_chunk(  # symlint: entry(drive=chunked, budget=0, shapes=receive-chunk)
     chunk, state, key, *, tol, alpha, scl, len_max, n_max, k_min, k_max,
     lloyd_iters, digitize_every_k, first,
 ):
@@ -596,7 +596,7 @@ def _masked_receive_chunk(
     return new_state, info
 
 
-def symed_receive_masked_chunk(
+def symed_receive_masked_chunk(  # symlint: entry(pair=chunk/slot, shapes=pair-chunk-slot)
     ts_chunk: jax.Array,
     n_valid: jax.Array,
     cfg: SymEDConfig,
@@ -632,7 +632,7 @@ def symed_receive_masked_chunk(
     )
 
 
-def symed_receive_masked_chunk_table(
+def symed_receive_masked_chunk_table(  # symlint: entry(pair=chunk/table, shapes=pair-chunk-table)
     windows: jax.Array,
     n_valid: jax.Array,
     cfg: SymEDConfig,
@@ -702,7 +702,7 @@ def symed_receive_masked_chunk_table(
     return new_table, info
 
 
-def symed_receive_masked_pieces_table(
+def symed_receive_masked_pieces_table(  # symlint: entry(pair=pieces/table, shapes=pair-pieces-table)
     piece_endpoints: jax.Array,
     piece_steps: jax.Array,
     n_valid: jax.Array,
@@ -831,7 +831,7 @@ def _masked_receive_pieces(
     return new_state, info
 
 
-def symed_receive_masked_pieces(
+def symed_receive_masked_pieces(  # symlint: entry(pair=pieces/slot, shapes=pair-pieces-slot)
     piece_endpoints: jax.Array,
     piece_steps: jax.Array,
     n_valid: jax.Array,
@@ -901,7 +901,7 @@ def symed_step_chunk(
         "n_max", "k_min", "k_max", "lloyd_iters", "reconstruct", "with_delta",
     ),
 )
-def _receive_finish(
+def _receive_finish(  # symlint: entry(drive=chunked, budget=0, shapes=receive-finish)
     state, ts, *, tol, scl, n_max, k_min, k_max, lloyd_iters, reconstruct,
     with_delta=False,
 ):

@@ -201,7 +201,7 @@ def _encode_slab(slab, keys, cfg: SymEDConfig, chunk_len, digitize_every_k,
 
 
 @functools.lru_cache(maxsize=32)
-def _mapped_runner(mesh, axes: Tuple[str, ...], cfg: SymEDConfig, chunk_len,
+def _mapped_runner(mesh, axes: Tuple[str, ...], cfg: SymEDConfig, chunk_len,  # symlint: entry(drive=fleet, budget=0)
                    digitize_every_k, reconstruct):
     """Jitted shard_map program, cached so repeat fleet runs (benchmarks,
     chunk-by-chunk services) pay trace+compile once per configuration."""

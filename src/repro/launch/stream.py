@@ -86,7 +86,7 @@ __all__ = ["StreamServer", "main"]
     jax.jit, static_argnames=("cfg", "digitize_every_k", "use_kernel"),
     donate_argnums=(0,),
 )
-def _table_step(table, windows, n_valid, *, cfg, digitize_every_k,
+def _table_step(table, windows, n_valid, *, cfg, digitize_every_k,  # symlint: entry(drive=stream, budget=0, shapes=table-step)
                 use_kernel=False):
     """One batched service step: every slot ingests its padded window.
 
@@ -106,7 +106,7 @@ def _table_step(table, windows, n_valid, *, cfg, digitize_every_k,
     jax.jit, static_argnames=("cfg", "digitize_every_k", "use_kernel"),
     donate_argnums=(0,),
 )
-def _table_step_pieces(table, endpoints, steps, n_valid, hello, t_seen, *,
+def _table_step_pieces(table, endpoints, steps, n_valid, hello, t_seen, *,  # symlint: entry(drive=stream, budget=0, shapes=table-step-pieces)
                        cfg, digitize_every_k, use_kernel=False):
     """Compressed-in service step: every slot scatters its padded pieces."""
     return symed_receive_masked_pieces_table(
