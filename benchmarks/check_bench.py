@@ -1,6 +1,6 @@
 """Bench regression gate for the resident stream service.
 
-Two checks, both sized for the CI ``bench-artifacts`` job:
+Four checks, all sized for the CI ``bench-artifacts`` job:
 
 1. **resident_speedup diff** -- compares the freshly generated
    ``BENCH_fleet.json`` against the committed one (read from ``git show
@@ -9,7 +9,16 @@ Two checks, both sized for the CI ``bench-artifacts`` job:
    more than ``--rel-tol`` (CI-noise allowance).  The committed artifact is
    the perf trajectory; this stops a "resident tick got slower than the
    slab rerun again" regression from merging silently.
-2. **compiled-program cache flatness** -- spins up a ladder-pre-traced
+2. **scale-row diff** -- the 8/32/64-session resident-tick throughput rows
+   against the same baseline (ROADMAP item 1's >32-session knee, tracked
+   as numbers rather than a footnote), with a wider ``--scale-rel-tol``
+   because large-table ticks jitter more on shared runners.
+3. **obs overhead** -- the flight recorder's instrumented-vs-disabled
+   resident-tick pair (both measured in the *fresh* artifact, so no
+   baseline is involved) must stay within ``--obs-tol`` (5%), with a small
+   absolute floor so sub-millisecond scheduler jitter on a fast tick does
+   not read as a fractional regression.
+4. **compiled-program cache flatness** -- spins up a ladder-pre-traced
    autoscaled ``StreamServer``, drives a grow/shrink/grow cycle, and fails
    if the donated table step compiled *anything* new: the serving loop's
    retrace-free contract, asserted against the live jit cache rather than
@@ -45,6 +54,45 @@ def check_speedup(fresh: dict, base: dict, rel_tol: float) -> bool:
     ok = f >= floor
     print(f"resident_speedup: fresh={f:.3f} committed={b:.3f} "
           f"floor={floor:.3f} -> {'ok' if ok else 'REGRESSION'}")
+    return ok
+
+
+def check_scale_rows(fresh: dict, base: dict, rel_tol: float) -> bool:
+    """Per-session-count resident-tick throughput vs the committed artifact."""
+    f_scale = fresh["summary"]["stream_service"].get("scale", {})
+    b_scale = base["summary"]["stream_service"].get("scale", {})
+    if not b_scale:
+        print("scale rows: no committed baseline entries; gate skipped")
+        return True
+    ok = True
+    for name in sorted(b_scale):
+        if name not in f_scale:
+            print(f"scale {name}: missing from fresh artifact -> FAIL")
+            ok = False
+            continue
+        f = float(f_scale[name]["points_per_s"])
+        b = float(b_scale[name]["points_per_s"])
+        floor = b * (1.0 - rel_tol)
+        row_ok = f >= floor
+        print(f"scale {name}: fresh={f:.0f} pts/s committed={b:.0f} "
+              f"floor={floor:.0f} -> {'ok' if row_ok else 'REGRESSION'}")
+        ok = ok and row_ok
+    return ok
+
+
+def check_obs_overhead(fresh: dict, tol: float, abs_floor_ms: float) -> bool:
+    """Instrumented-vs-disabled resident tick, both from the fresh artifact."""
+    obs = fresh["summary"]["stream_service"].get("obs")
+    if obs is None:
+        print("obs overhead: no obs section in fresh artifact -> FAIL")
+        return False
+    on = float(obs["tick_ms_obs_on"])
+    off = float(obs["tick_ms_obs_off"])
+    frac = (on - off) / max(off, 1e-12)
+    ok = frac <= tol or (on - off) <= abs_floor_ms
+    print(f"obs overhead: on={on:.3f}ms off={off:.3f}ms "
+          f"frac={frac:+.4f} (tol {tol:.2f}, abs floor {abs_floor_ms}ms) "
+          f"-> {'ok' if ok else 'TOO EXPENSIVE'}")
     return ok
 
 
@@ -87,6 +135,16 @@ def main() -> int:
                          "for shared-runner timing noise: the gate catches "
                          "structural regressions like the 0.68x inversion, "
                          "not percent-level jitter)")
+    ap.add_argument("--scale-rel-tol", type=float, default=0.35,
+                    help="allowed fractional points_per_s drop on the "
+                         "8/32/64-session scale rows (wider than --rel-tol: "
+                         "big-table ticks jitter more on shared runners)")
+    ap.add_argument("--obs-tol", type=float, default=0.05,
+                    help="allowed fractional obs-on vs obs-off resident-tick "
+                         "overhead (the flight recorder's cost contract)")
+    ap.add_argument("--obs-abs-floor-ms", type=float, default=0.3,
+                    help="absolute obs-overhead allowance: differences under "
+                         "this many ms pass regardless of the fraction")
     ap.add_argument("--skip-cache-check", action="store_true",
                     help="only diff the artifacts (no jax work)")
     args = ap.parse_args()
@@ -96,10 +154,12 @@ def main() -> int:
     base = load_baseline(args.baseline)
     ok = True
     if base is None:
-        print(f"no committed baseline ({args.baseline}); speedup gate "
-              "skipped")
+        print(f"no committed baseline ({args.baseline}); speedup + scale "
+              "gates skipped")
     else:
         ok = check_speedup(fresh, base, args.rel_tol) and ok
+        ok = check_scale_rows(fresh, base, args.scale_rel_tol) and ok
+    ok = check_obs_overhead(fresh, args.obs_tol, args.obs_abs_floor_ms) and ok
     if not args.skip_cache_check:
         ok = check_cache_flat() and ok
     return 0 if ok else 1

@@ -224,11 +224,12 @@ def run(quick: bool = False) -> Tuple[List[tuple], dict]:
     # n_max), so averaged over a cadence period k > 1 costs about the same
     # digitize work as k=1 -- the sweep meters enough ticks to amortize the
     # wider on-cadence spans against the no-op off-cadence ones.
-    def resident_tick_s(n_sessions: int, dk: int, length: int) -> float:
+    def resident_tick_s(n_sessions: int, dk: int, length: int,
+                        obs=None) -> float:
         n_sessions = round_up(n_sessions)
         slab = np.asarray(make_fleet(n_sessions, length, seed=3))
         srv = StreamServer(cfg, max_sessions=n_sessions, window_cap=svc_win,
-                           digitize_every_k=dk)
+                           digitize_every_k=dk, obs=obs)
         ids = [f"r{i}" for i in range(n_sessions)]
         for sid in ids:
             srv.open(sid)
@@ -265,6 +266,30 @@ def run(quick: bool = False) -> Tuple[List[tuple], dict]:
         cadence[f"k_{dk}"] = {"tick_ms": 1e3 * dt, "points_per_s": pts / dt}
     summary["stream_service"]["scale"] = scale
     summary["stream_service"]["cadence"] = cadence
+
+    # flight-recorder overhead: the identical steady-state tick with the
+    # observability layer enabled (the default) vs disabled (obs=False,
+    # shared null instruments).  Interleaved min-of-2 runs cancel most
+    # scheduler noise; ``check_bench.py`` gates overhead_frac at <= 5%
+    # (with a small absolute floor for sub-ms jitter).  Both measurements
+    # come from this same artifact, so the gate needs no baseline.
+    obs_len = svc_win * (6 if quick else 12)
+    runs = {True: [], False: []}
+    for _ in range(2):
+        for enabled in (False, True):
+            runs[enabled].append(resident_tick_s(
+                svc_streams, 1, obs_len, obs=None if enabled else False))
+    dt_on, dt_off = min(runs[True]), min(runs[False])
+    pts = svc_streams * svc_win
+    rows.append((f"service_resident_tick_obs_on_{svc_streams}x{obs_len}"
+                 f"_w{svc_win}", 1e6 * dt_on, pts / dt_on))
+    rows.append((f"service_resident_tick_obs_off_{svc_streams}x{obs_len}"
+                 f"_w{svc_win}", 1e6 * dt_off, pts / dt_off))
+    summary["stream_service"]["obs"] = {
+        "tick_ms_obs_on": 1e3 * dt_on,
+        "tick_ms_obs_off": 1e3 * dt_off,
+        "overhead_frac": (dt_on - dt_off) / max(dt_off, 1e-12),
+    }
     return rows, summary
 
 

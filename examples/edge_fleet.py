@@ -57,7 +57,7 @@ def main():
     cfg = SymEDConfig(tol=args.tol, alpha=args.alpha, n_max=256, k_max=32,
                       len_max=256)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     out, tele = run_fleet(
         fleet, cfg, jax.random.key(0), mesh,
         chunk_len=args.chunk or None,
@@ -65,7 +65,7 @@ def main():
         reconstruct=True, axis=mesh_axes,
     )
     jax.block_until_ready(out["n_pieces"])
-    rep = fleet_report(tele, time.time() - t0)
+    rep = fleet_report(tele, time.perf_counter() - t0)
 
     n_pieces = np.asarray(out["n_pieces"])
     mode = describe_ingestion(args.chunk, args.digitize_every)

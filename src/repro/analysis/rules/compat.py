@@ -41,6 +41,7 @@ FALLBACK_TOKENS = (
     "jax.make_mesh",
     "jax.experimental.shard_map", "jax.shard_map",
     "check_rep=", "check_vma=",
+    "jax.profiler.TraceAnnotation", "jax.profiler.TraceContext",
 )
 
 _TOKEN_RE = re.compile(r"``([^`]+)``")

@@ -58,7 +58,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
     spec = input_specs(cfg, shape_name)
     oc = spec["opt_config"]
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     exclude = ("pod",) if grad_compress else ()
     disable = ("seq_block",) if no_sp else ()
     with mesh, use_mesh_rules(mesh, exclude=exclude, disable=disable):
@@ -169,7 +169,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         "n_chips": n_chips,
         "n_params": n_params,
         "n_active_params": n_active,
-        "compile_seconds": round(time.time() - t0, 1),
+        "compile_seconds": round(time.perf_counter() - t0, 1),
         "memory": {
             "argument_bytes_per_dev": mem.argument_size_in_bytes,
             "output_bytes_per_dev": mem.output_size_in_bytes,

@@ -245,6 +245,7 @@ def run_fleet(
     digitize_every_k: Optional[int] = None,
     reconstruct: bool = False,
     axis: AxisSpec = "data",
+    obs=None,
 ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
     """Run the SymED pipeline over ``fleet`` (n_streams, T), sharded on ``axis``.
 
@@ -266,6 +267,11 @@ def run_fleet(
     ``wire_bytes``, ``raw_bytes``, and ``wire_out_bytes`` -- the outbound
     symbol-delta traffic (one frame per digitize pass plus the closing
     frame, ``repro.launch.stream``'s wire format).
+
+    ``obs``: optional ``repro.obs.Observability`` bundle; when given, the
+    dispatch is recorded as a ``fleet.dispatch`` span + histogram sample
+    (dispatch only -- the runner returns asynchronously; block on the
+    telemetry before timing end-to-end).
     """
     mesh = mesh if mesh is not None else fleet_data_mesh()
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -301,13 +307,28 @@ def run_fleet(
 
     runner = _mapped_runner(mesh, axes, cfg, chunk_len, digitize_every_k,
                             reconstruct)
+    obs_on = obs is not None and obs.enabled
+    t_disp = time.perf_counter_ns() if obs_on else 0
     with mesh:
         out, tele = runner(fleet, keys)
+    if obs_on:
+        obs.metrics.histogram(
+            "fleet_dispatch_seconds", "run_fleet dispatch latency "
+            "(trace/compile on first call at a shape)", unit="ns"
+        ).observe(time.perf_counter_ns() - t_disp)
+        obs.tracer.add("fleet.dispatch", t_disp,
+                       {"streams": n_streams, "shards": n_shards})
     return out, tele
 
 
-def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, float]:
+def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float,
+                 obs=None) -> Dict[str, object]:
     """Host-side summary: telemetry totals + wall-clock rates.
+
+    ``obs``: optional ``repro.obs.Observability`` bundle.  When given, the
+    fleet totals are published as gauges on its registry (so a scrape of a
+    long-lived driver sees the wire/throughput story) and its JSON snapshot
+    is merged under the report's ``"obs"`` key.
 
     Robust to empty fleets (zero streams / zero points): every ratio is
     clamped, so the report never divides by zero.  ``ms_per_symbol`` is the
@@ -328,7 +349,7 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, f
     """
     t = {k: float(v) for k, v in tele.items()}
     dt = max(wall_seconds, 1e-9)
-    return {
+    rep: Dict[str, object] = {
         **t,
         "wall_seconds": wall_seconds,
         "points_per_s": t["points"] / dt,
@@ -343,6 +364,14 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float) -> Dict[str, f
         "wire_out_bytes": t.get("wire_out_bytes", 0.0),
         "wire_out_ratio": t.get("wire_out_bytes", 0.0) / max(t["raw_bytes"], 1.0),
     }
+    if obs is not None and obs.enabled:
+        m = obs.metrics
+        for key in ("streams", "points", "pieces", "wire_bytes", "raw_bytes",
+                    "wire_out_bytes"):
+            if key in t:
+                m.gauge(f"fleet_{key}", "fleet telemetry total").set(t[key])
+        rep["obs"] = obs.snapshot()
+    return rep
 
 
 def main():
@@ -381,15 +410,18 @@ def main():
                       len_max=256)
     fleet = make_fleet(streams, args.length, seed=0)
 
-    t0 = time.time()
+    from repro.obs import Observability
+
+    obs = Observability()
+    t0 = time.perf_counter()
     out, tele = run_fleet(
         fleet, cfg, jax.random.key(0), mesh,
         chunk_len=args.chunk or None,
         digitize_every_k=args.digitize_every or None,
-        reconstruct=args.reconstruct, axis=mesh_axes,
+        reconstruct=args.reconstruct, axis=mesh_axes, obs=obs,
     )
     jax.block_until_ready(tele["pieces"])
-    rep = fleet_report(tele, time.time() - t0)
+    rep = fleet_report(tele, time.perf_counter() - t0, obs=obs)
 
     mode = describe_ingestion(args.chunk, args.digitize_every)
     print(f"devices / data shards   : {n_dev}")

@@ -58,6 +58,7 @@ if __name__ == "__main__":  # pragma: no cover -- CLI path only
         )
 
 import argparse
+import contextlib
 import dataclasses
 import functools
 import time
@@ -78,8 +79,18 @@ from repro.core.symed import (
     symed_receive_masked_chunk_table, symed_receive_masked_pieces_table,
 )
 from repro.kernels import ops
+from repro.obs import Observability, as_obs
+from repro.utils.jax_compat import trace_annotation
 
 __all__ = ["StreamServer", "main"]
+
+# Shared inert context for the non-annotated dispatch path: nullcontext is
+# stateless and reentrant, so one instance serves every round.
+_NULL_ANN_CTX = contextlib.nullcontext()
+
+
+def _null_annotation(name: str):
+    return _NULL_ANN_CTX
 
 
 @functools.partial(
@@ -232,6 +243,15 @@ class StreamServer:
       mesh: optional 1-D ``(data,)`` mesh; the slot table shards over it
         (``max_sessions``, ``min_slots`` and every ladder capacity must
         divide over the mesh devices).
+      obs: the flight recorder (``repro.obs``).  ``None`` (default) makes a
+        fresh enabled ``Observability`` bundle; ``False`` disables recording
+        entirely (shared null instruments, zero per-round cost); passing a
+        bundle lets layered components (e.g. the transport front end) share
+        one registry -- but each registry admits only *one* ``StreamServer``
+        (the totals-backed callback series are per-server).  Recording is
+        host-side integer arithmetic only, so the ingest hot path stays
+        sync-free; the instrumented-vs-disabled tick overhead is gated at
+        <= 5% by ``benchmarks/check_bench.py``.
     """
 
     def __init__(
@@ -251,6 +271,7 @@ class StreamServer:
         pretrace: bool = False,
         seed: int = 0,
         mesh=None,
+        obs=None,
     ):
         if max_sessions < 1:
             raise ValueError(f"max_sessions must be >= 1, got {max_sessions}")
@@ -313,6 +334,75 @@ class StreamServer:
         self._table = self._shard(self._blanks(self.capacity))
         if pretrace:
             self._pretrace_ladder()
+        self.obs = as_obs(obs)
+        self._obs_on = self.obs.enabled
+        self._ann = (trace_annotation if self.obs.jax_annotate
+                     else _null_annotation)
+        # retrace accounting baseline: jit cache entries at construction
+        # (module-level cache, so the counter reports compiles observed by
+        # *this* server since its init -- incl. first-touch rungs when
+        # pretrace is off)
+        self._compiled_base = self._cache_entries()
+        self._compiled_seen = self._compiled_base
+        self._register_metrics()
+
+    @staticmethod
+    def _cache_entries() -> int:
+        return int(_table_step._cache_size() + _table_step_pieces._cache_size())
+
+    def _note_compiles(self) -> None:
+        """Drop an instant trace event when the jit cache grew this round.
+
+        A growing cache during serving means a retrace the pretrace ladder
+        did not cover -- exactly the event worth seeing on the timeline.
+        Cost when nothing changed: two cache-size reads (dict lens).
+        """
+        cs = self._cache_entries()
+        if cs > self._compiled_seen:
+            self.obs.tracer.instant("stream.retrace", {"compiled": cs})
+            self._compiled_seen = cs
+
+    def _register_metrics(self) -> None:
+        """Wire the flight recorder to this server.
+
+        Histograms are recorded in the serving loop (integer bucket adds);
+        everything already counted in ``self.totals`` is exposed as
+        scrape-time callback series instead -- zero added hot-path work.
+        """
+        m = self.obs.metrics
+        self._h_symbol_lat = m.histogram(
+            "symed_symbol_latency_seconds",
+            "per-symbol latency: window arrival to delta-frame emit "
+            "(the paper's 42 ms metric)", unit="ns")
+        self._h_tick = m.histogram(
+            "symed_ingest_tick_seconds",
+            "per-round ingest latency: pack + dispatch + harvest", unit="ns")
+        if not self._obs_on:
+            return
+        t = self.totals
+        for key, name, help_text in (
+            ("points_in", "symed_points_in_total", "raw points ingested"),
+            ("bytes_in", "symed_wire_in_bytes_total", "inbound wire bytes"),
+            ("symbols_out", "symed_symbols_out_total", "symbols emitted"),
+            ("frames_out", "symed_frames_out_total", "delta frames emitted"),
+            ("bytes_out", "symed_wire_out_bytes_total", "outbound wire bytes"),
+            ("steps", "symed_batched_steps_total", "donated table steps run"),
+            ("opened", "symed_sessions_opened_total", "sessions opened"),
+            ("closed", "symed_sessions_closed_total", "sessions closed"),
+            ("evicted", "symed_sessions_evicted_total", "sessions LRU-evicted"),
+            ("grows", "symed_table_grows_total", "autoscale ladder grows"),
+            ("shrinks", "symed_table_shrinks_total", "autoscale ladder shrinks"),
+        ):
+            m.counter_fn(name, help_text,
+                         (lambda k=key: float(t[k])))
+        m.gauge_fn("symed_active_sessions", "open sessions",
+                   lambda: float(len(self._sessions)))
+        m.gauge_fn("symed_table_capacity", "slot-table capacity",
+                   lambda: float(self.capacity))
+        m.counter_fn("symed_table_retraces_total",
+                     "batched-step compiles observed since server init",
+                     lambda: float(max(self._cache_entries()
+                                       - self._compiled_base, 0)))
 
     def _pretrace_ladder(self) -> None:
         """Warm the jit cache for every capacity on the autoscale ladder.
@@ -397,6 +487,7 @@ class StreamServer:
                     f"session table full ({self.max_sessions} slots); "
                     "close a session or construct with evict_idle=True")
             lru = min(self._sessions.values(), key=lambda s: s.last_active)
+            self.obs.tracer.instant("stream.evict", {"session": lru.stream_id})
             self.evicted[lru.stream_id] = self.close(lru.stream_id)
             self.totals["evicted"] += 1
             self.totals["closed"] -= 1  # eviction is not a clean close
@@ -444,8 +535,12 @@ class StreamServer:
             (len(w) + self.window_cap - 1) // self.window_cap
             for w in wins.values()
         ) if wins else 0
+        obs_on = self._obs_on
+        tracer = self.obs.tracer
         pend_active, pend_info, pend_clock = [], None, 0  # round in flight
+        pend_t0 = 0  # arrival stamp of the round in flight (obs)
         for r in range(rounds):
+            t_arrive = time.perf_counter_ns() if obs_on else 0
             padded = np.zeros((self.capacity, self.window_cap), np.float32)
             n_valid = np.zeros((self.capacity,), np.int32)
             active = []
@@ -460,37 +555,57 @@ class StreamServer:
             if active:
                 windows = self._put(jnp.asarray(padded))
                 counts = self._put(jnp.asarray(n_valid))
-                self._table, info = _table_step(
-                    self._table, windows, counts,
-                    cfg=self.cfg, digitize_every_k=self.digitize_every_k,
-                    use_kernel=self.use_kernel)
+                if obs_on:
+                    tracer.add("stream.pack", t_arrive,
+                               {"round": r, "sessions": len(active)})
+                t_disp = time.perf_counter_ns() if obs_on else 0
+                with self._ann("symed.table_step"):
+                    self._table, info = _table_step(
+                        self._table, windows, counts,
+                        cfg=self.cfg, digitize_every_k=self.digitize_every_k,
+                        use_kernel=self.use_kernel)
+                if obs_on:
+                    tracer.add("stream.dispatch", t_disp)
+                    self._note_compiles()
                 self.totals["steps"] += 1
                 self._clock += 1
             # harvest the *previous* round only after this one is in flight
             if pend_active:
                 self._harvest_round(pend_active, pend_info, pend_clock,
-                                    deltas)
+                                    deltas, pend_t0)
             pend_active = active
             if active:
-                pend_info, pend_clock = info, self._clock
+                pend_info, pend_clock, pend_t0 = info, self._clock, t_arrive
         if pend_active:
-            self._harvest_round(pend_active, pend_info, pend_clock, deltas)
+            self._harvest_round(pend_active, pend_info, pend_clock, deltas,
+                                pend_t0)
         self._run_dtw_monitor()
         return _finalize_deltas(deltas)
 
-    def _harvest_round(self, active, info, clock, deltas) -> None:
-        """Transfer one round's outputs and fold them into the books."""
+    def _harvest_round(self, active, info, clock, deltas, t0_ns=0) -> None:
+        """Transfer one round's outputs and fold them into the books.
+
+        ``t0_ns`` is the round's host arrival stamp (pack start), so the
+        latency histograms measure the full arrival -> delta-frame-emit
+        path across the double buffer.
+        """
+        obs_on = self._obs_on
+        t_h = time.perf_counter_ns() if obs_on else 0
         d = info["symbol_delta"]
         # one blocking transfer per round, not one per output leaf
         labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
             (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
              info["t_seen"]))
+        lat = (time.perf_counter_ns() - t0_ns) if obs_on else 0
         for sid, part in active:
             sess = self._sessions[sid]
+            n = int(n_new[sess.slot])
             self._account_delta(
                 sess, deltas[sid], labels[sess.slot],
-                endpoints[sess.slot], int(n_new[sess.slot]),
+                endpoints[sess.slot], n,
                 bool(emitted[sess.slot]))
+            if obs_on and n:
+                self._h_symbol_lat.observe_n(lat, n)
             sess.chunks += 1
             sess.t_seen = int(t_seen[sess.slot])
             sess.last_active = clock
@@ -501,6 +616,10 @@ class StreamServer:
             if (self.dtw_every and sess.raw is not None
                     and sess.chunks % self.dtw_every == 0):
                 self._dtw_due.add(sid)
+        if obs_on:
+            self._h_tick.observe(lat)
+            self.obs.tracer.add("stream.harvest", t_h,
+                                {"sessions": len(active)})
 
     def ingest_pieces_many(self, arrivals: Dict[str, dict]) -> Dict[str, dict]:  # symlint: hot-path
         """Compressed-in counterpart of ``ingest_many``.
@@ -533,8 +652,12 @@ class StreamServer:
             ((len(p["endpoints"]) + cap - 1) // cap or 1)
             for p in pends.values()
         ) if pends else 0
+        obs_on = self._obs_on
+        tracer = self.obs.tracer
         pend_active, pend_info, pend_clock = [], None, 0  # round in flight
+        pend_t0 = 0  # arrival stamp of the round in flight (obs)
         for r in range(rounds):
+            t_arrive = time.perf_counter_ns() if obs_on else 0
             pad_e = np.zeros((self.capacity, cap), np.float32)
             pad_s = np.zeros((self.capacity, cap), np.int32)
             n_valid = np.zeros((self.capacity,), np.int32)
@@ -560,43 +683,62 @@ class StreamServer:
             if active:
                 args = [self._put(jnp.asarray(x))
                         for x in (pad_e, pad_s, n_valid, hello, t_seen_in)]
-                self._table, info = _table_step_pieces(
-                    self._table, *args,
-                    cfg=self.cfg, digitize_every_k=self.digitize_every_k,
-                    use_kernel=self.use_kernel)
+                if obs_on:
+                    tracer.add("stream.pack_pieces", t_arrive,
+                               {"round": r, "sessions": len(active)})
+                t_disp = time.perf_counter_ns() if obs_on else 0
+                with self._ann("symed.table_step_pieces"):
+                    self._table, info = _table_step_pieces(
+                        self._table, *args,
+                        cfg=self.cfg, digitize_every_k=self.digitize_every_k,
+                        use_kernel=self.use_kernel)
+                if obs_on:
+                    tracer.add("stream.dispatch_pieces", t_disp)
+                    self._note_compiles()
                 self.totals["steps"] += 1
                 self._clock += 1
             # harvest the *previous* round only after this one is in flight
             if pend_active:
                 self._harvest_pieces_round(pend_active, pend_info,
-                                           pend_clock, deltas)
+                                           pend_clock, deltas, pend_t0)
             pend_active = active
             if active:
-                pend_info, pend_clock = info, self._clock
+                pend_info, pend_clock, pend_t0 = info, self._clock, t_arrive
         if pend_active:
             self._harvest_pieces_round(pend_active, pend_info, pend_clock,
-                                       deltas)
+                                       deltas, pend_t0)
         return _finalize_deltas(deltas)
 
-    def _harvest_pieces_round(self, active, info, clock, deltas) -> None:
+    def _harvest_pieces_round(self, active, info, clock, deltas,
+                              t0_ns=0) -> None:
         """Pieces-mode counterpart of ``_harvest_round``."""
+        obs_on = self._obs_on
+        t_h = time.perf_counter_ns() if obs_on else 0
         d = info["symbol_delta"]
         # one blocking transfer per round, not one per output leaf
         labels, endpoints, n_new, emitted, t_seen = jax.device_get(  # sync: ok
             (d["labels"], d["endpoints"], d["n_new"], d["emitted"],
              info["t_seen"]))
+        lat = (time.perf_counter_ns() - t0_ns) if obs_on else 0
         for sid, n_in in active:
             sess = self._sessions[sid]
+            n = int(n_new[sess.slot])
             self._account_delta(
                 sess, deltas[sid], labels[sess.slot],
-                endpoints[sess.slot], int(n_new[sess.slot]),
+                endpoints[sess.slot], n,
                 bool(emitted[sess.slot]))
+            if obs_on and n:
+                self._h_symbol_lat.observe_n(lat, n)
             if n_in:
                 sess.chunks += 1
             now_seen = int(t_seen[sess.slot])
             self.totals["points_in"] += max(now_seen - sess.t_seen, 0)
             sess.t_seen = now_seen
             sess.last_active = clock
+        if obs_on:
+            self._h_tick.observe(lat)
+            self.obs.tracer.add("stream.harvest_pieces", t_h,
+                                {"sessions": len(active)})
 
     def close(self, stream_id: str) -> dict:
         """Flush the tail, emit the closing delta frame, free the slot.
@@ -645,8 +787,12 @@ class StreamServer:
             "dtw": sess.dtw,
         }
 
-    def report(self, wall_seconds: float) -> Dict[str, float]:
+    def report(self, wall_seconds: float) -> Dict[str, object]:
         """Host-side service summary (the fleet_report counterpart).
+
+        All top-level values are floats; when the flight recorder is
+        enabled, an ``"obs"`` key holds its nested JSON snapshot
+        (counters / gauges / histogram digests with p50/p99/p999).
 
         ``wire_in_bytes``/``wire_in_ratio`` measure inbound traffic against
         the raw-points equivalent (4 B/point): ~1 for raw-in transport,
@@ -663,7 +809,7 @@ class StreamServer:
         t = {k: float(v) for k, v in self.totals.items()}
         dt = max(wall_seconds, 1e-9)
         raw_bytes = 4.0 * t["points_in"]
-        return {
+        rep: Dict[str, object] = {
             **t,
             "active": float(self.active_sessions),
             "capacity": float(self.capacity),
@@ -676,6 +822,9 @@ class StreamServer:
             "wire_in_ratio": t["bytes_in"] / max(raw_bytes, 1.0),
             "wire_out_ratio": t["bytes_out"] / max(raw_bytes, 1.0),
         }
+        if self._obs_on:
+            rep["obs"] = self.obs.snapshot()
+        return rep
 
     # ------------------------------------------------------------- internals
 
@@ -711,6 +860,7 @@ class StreamServer:
         self._free.extend(range(self.capacity, new_cap))
         self.capacity = new_cap
         self.totals["grows"] += 1
+        self.obs.tracer.instant("stream.grow", {"capacity": new_cap})
 
     def _maybe_shrink(self) -> None:
         """Walk down the ladder once occupancy has stayed at or below a
@@ -753,6 +903,7 @@ class StreamServer:
             self._free = list(range(len(live), target))
             self.capacity = target
             self.totals["shrinks"] += 1
+            self.obs.tracer.instant("stream.shrink", {"capacity": target})
 
     def _run_dtw_monitor(self) -> None:
         """Online reconstruction error for every session whose DTW cadence
@@ -772,6 +923,7 @@ class StreamServer:
         self._dtw_due.clear()
         if not due:
             return
+        t_dtw = time.perf_counter_ns() if self._obs_on else 0
         subs = _gather_slots(
             self._table, jnp.asarray([s.slot for s in due], jnp.int32))
         # one transfer for the whole due set, off the per-round hot path
@@ -786,6 +938,9 @@ class StreamServer:
             d = ops.dtw(raw[None], np.asarray(rec)[None], band=self.dtw_band,
                         force_ref=ops.on_cpu())
             sess.dtw = float(d[0])
+        if self._obs_on:
+            self.obs.tracer.add("stream.dtw_monitor", t_dtw,
+                                {"sessions": len(due)})
 
 
 # ----------------------------------------------------------------- CLI
@@ -858,6 +1013,11 @@ def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
                      f"--devices {args.devices}")
     if args.shrink_patience < 1:
         ap.error(f"--shrink-patience must be >= 1, got {args.shrink_patience}")
+    if args.metrics_port is not None and not 0 <= args.metrics_port <= 65535:
+        ap.error(f"--metrics-port must be in [0, 65535], got "
+                 f"{args.metrics_port}")
+    if args.metrics_linger < 0:
+        ap.error(f"--metrics-linger must be >= 0, got {args.metrics_linger}")
 
 
 def main():
@@ -894,6 +1054,15 @@ def main():
     ap.add_argument("--tol", type=float, default=0.5)
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics (+ /metrics.json, "
+                         "/trace) on this port for the run's duration")
+    ap.add_argument("--metrics-linger", type=float, default=0.0,
+                    help="keep the metrics endpoint up this many seconds "
+                         "after the run finishes (scrape window)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the span ring as Chrome trace-event JSON "
+                         "(load at ui.perfetto.dev)")
     args = ap.parse_args()
     validate_cli_args(ap, args)
 
@@ -903,13 +1072,19 @@ def main():
     cfg = SymEDConfig(tol=args.tol, alpha=args.alpha, n_max=256, k_max=32,
                       len_max=256)
     mesh = fleet_data_mesh() if args.devices > 1 else None
+    obs = Observability(trace_capacity=65536)
     server = StreamServer(
         cfg, max_sessions=args.max_slots, window_cap=args.window,
         digitize_every_k=args.digitize_every, dtw_every=args.dtw_every,
         evict_idle=args.evict, autoscale=args.autoscale,
         min_slots=args.min_slots, shrink_patience=args.shrink_patience,
-        seed=args.seed, mesh=mesh, pretrace=args.pretrace,
+        seed=args.seed, mesh=mesh, pretrace=args.pretrace, obs=obs,
     )
+    exporter = None
+    if args.metrics_port is not None:
+        from repro.obs.export import start_exporter
+        exporter = start_exporter(obs, args.metrics_port)
+        print(f"metrics exporter        : {exporter.url}/metrics")
     data = np.asarray(make_fleet(args.sessions, args.length, seed=args.seed))
     keys = jax.random.split(jax.random.key(args.seed), args.sessions)
     n_windows = -(-args.length // args.window)
@@ -919,7 +1094,7 @@ def main():
     deltas: Dict[str, list] = {sid: [] for sid in sids}
     closed: Dict[str, dict] = {}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for tick in _arrival_schedule(
             args.arrival_pattern, args.sessions, n_windows, rng):
         batch = {}
@@ -939,7 +1114,7 @@ def main():
         for sid in list(batch):
             if sid in server and server.session_stats(sid)["t_seen"] >= args.length:
                 closed[sid] = server.close(sid)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     closed.update(server.evicted)
 
     rep = server.report(wall)
@@ -991,6 +1166,26 @@ def main():
             np.testing.assert_array_equal(got, want)
             checked += 1
         print(f"delta equivalence       : OK ({checked} sessions bitwise)")
+
+    # flight-recorder summary (stable key=value line, like stream_summary)
+    snap = obs.snapshot()
+    lat = snap["histograms"].get("symed_symbol_latency_seconds", {})
+    print("obs_summary "
+          f"symbol_p50_ms={1e3 * lat.get('p50', 0.0):.3f} "
+          f"symbol_p99_ms={1e3 * lat.get('p99', 0.0):.3f} "
+          f"symbol_p999_ms={1e3 * lat.get('p999', 0.0):.3f} "
+          f"symbols={int(lat.get('count', 0))} "
+          f"spans={int(snap['spans_recorded'])}")
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"trace written           : {args.trace_out} "
+              f"({obs.tracer.recorded} events, load at ui.perfetto.dev)")
+    if exporter is not None:
+        if args.metrics_linger:
+            print(f"metrics exporter        : lingering "
+                  f"{args.metrics_linger:.0f}s for scrapes", flush=True)
+            time.sleep(args.metrics_linger)
+        exporter.close()
 
 
 if __name__ == "__main__":

@@ -133,12 +133,12 @@ def main():
         cfg = lm100m_config(vocab=max(tok_vocab, 128))
     cfg = dataclasses.replace(cfg, vocab=max(cfg.vocab, tok_vocab))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     _, report = train_loop(
         cfg, steps=args.steps, batch=args.batch, seq=args.seq, lr=args.lr,
         ckpt_dir=args.ckpt_dir, fail_at_step=args.fail_at_step,
     )
-    print(f"[train] done in {time.time() - t0:.1f}s; "
+    print(f"[train] done in {time.perf_counter() - t0:.1f}s; "
           f"final loss {report['loss_history'][-1]:.4f}")
 
 

@@ -420,6 +420,62 @@ class TransportServer:
         self.frame_bytes = 0.0      # total socket bytes in (incl. framing)
         self.payload_bytes = {MODE_RAW: 0.0, MODE_PIECES: 0.0}
         self.raw_equiv_bytes = {MODE_RAW: 0.0, MODE_PIECES: 0.0}
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Record into the wrapped ``StreamServer``'s flight recorder, so one
+        scrape covers the socket tier and the slot table together.
+
+        Socket totals already tracked on ``self`` become scrape-time callback
+        series (zero loop cost); per-frame/decode signals are live counters
+        and histograms recorded in ``_tick``/``_process``.
+        """
+        from repro.obs import disabled
+
+        self._obs = getattr(self.server, "obs", None) or disabled()
+        self._obs_on = self._obs.enabled
+        m = self._obs.metrics
+        self._h_decode = m.histogram(
+            "transport_decode_seconds",
+            "per-recv frame decode latency", unit="ns")
+        self._h_route = m.histogram(
+            "transport_route_seconds",
+            "per-batch frame handling: stage + ingest + reply", unit="ns")
+        self._m_frames = {
+            OPEN: m.counter("transport_frames_in_total", "frames received",
+                            labels={"type": "open"}),
+            DATA: m.counter("transport_frames_in_total", "frames received",
+                            labels={"type": "data"}),
+            CLOSE: m.counter("transport_frames_in_total", "frames received",
+                             labels={"type": "close"}),
+        }
+        self._m_frames_other = m.counter(
+            "transport_frames_in_total", "frames received",
+            labels={"type": "other"})
+        self._m_tx = m.counter("transport_tx_bytes_total",
+                               "bytes written back to senders")
+        self._m_proto_errors = m.counter(
+            "transport_protocol_errors_total",
+            "malformed frames / payloads rejected")
+        self._m_drops = m.counter(
+            "transport_conn_drops_total",
+            "connections dropped (EOF, errors, protocol violations)")
+        if not self._obs_on:
+            return
+        m.counter_fn("transport_rx_bytes_total",
+                     "socket bytes received (incl. framing)",
+                     lambda: float(self.frame_bytes))
+        m.counter_fn("transport_payload_bytes_total", "payload bytes by mode",
+                     lambda: float(self.payload_bytes[MODE_RAW]),
+                     labels={"mode": "raw"})
+        m.counter_fn("transport_payload_bytes_total", "payload bytes by mode",
+                     lambda: float(self.payload_bytes[MODE_PIECES]),
+                     labels={"mode": "pieces"})
+        m.counter_fn("transport_sessions_closed_total",
+                     "sessions closed over the wire",
+                     lambda: float(self.closed_sessions))
+        m.gauge_fn("transport_open_connections", "live sender sockets",
+                   lambda: float(len(self._conns)))
 
     def serve(self, expect_sessions: Optional[int] = None,
               stop=None, poll: float = 0.05) -> None:
@@ -462,15 +518,26 @@ class TransportServer:
                 self._drop_conn(sock_)
                 continue
             self.frame_bytes += len(data)
+            t_dec = time.perf_counter_ns() if self._obs_on else 0
             try:
                 frames = self._conns[sock_].feed(data)
             except ValueError as e:
+                self._m_proto_errors.inc()
                 try:
                     sock_.sendall(encode_error("", f"protocol error: {e}"))
                 except OSError:
                     pass
                 self._drop_conn(sock_)
                 continue
+            if self._obs_on:
+                self._h_decode.observe(time.perf_counter_ns() - t_dec)
+                self._obs.tracer.add(
+                    "transport.decode", t_dec,
+                    {"bytes": len(data), "frames": len(frames)})
+                frame_counters = self._m_frames
+                for f in frames:
+                    (frame_counters.get(f.type)
+                     or self._m_frames_other).inc()
             staged.extend((sock_, f) for f in frames)
         if staged:
             self._process(staged)
@@ -478,7 +545,8 @@ class TransportServer:
     def _drop_conn(self, conn) -> None:
         """A vanished sender abandons its sessions: close them server-side."""
         conn.close()
-        self._conns.pop(conn, None)
+        if self._conns.pop(conn, None) is not None:
+            self._m_drops.inc()
         for sid in [s for s, w in self._wire.items() if w.conn is conn]:
             del self._wire[sid]
             if sid in self.server:
@@ -488,10 +556,12 @@ class TransportServer:
     def _reply(self, conn, data: bytes) -> None:
         try:
             conn.sendall(data)
+            self._m_tx.inc(len(data))
         except OSError:
             self._drop_conn(conn)
 
     def _process(self, staged) -> None:
+        t_route = time.perf_counter_ns() if self._obs_on else 0
         raw_batch: Dict[str, list] = {}
         pieces_batch: Dict[str, dict] = {}
         closes: List[str] = []
@@ -503,10 +573,15 @@ class TransportServer:
                 # a well-framed body with garbage inside must not take the
                 # serve loop (and every other tenant) down -- the offending
                 # connection is dropped, its sessions closed server-side
+                self._m_proto_errors.inc()
                 self._reply(conn, encode_error(
                     frame.sid, f"malformed frame payload: {e}"))
                 self._drop_conn(conn)
         self._flush(raw_batch, pieces_batch, closes)
+        if self._obs_on:
+            self._h_route.observe(time.perf_counter_ns() - t_route)
+            self._obs.tracer.add("transport.route", t_route,
+                                 {"frames": len(staged)})
 
     def _handle_frame(self, conn, frame: Frame, raw_batch, pieces_batch,
                       closes) -> None:
@@ -665,13 +740,24 @@ def _serve_main(args) -> int:
         seed=args.seed, mesh=mesh,
     )
     transport = TransportServer(server, host=args.host, port=args.port)
+    exporter = None
+    if args.metrics_port is not None:
+        from repro.obs.export import start_exporter
+        exporter = start_exporter(server.obs, args.metrics_port)
+        print(f"metrics exporter        : {exporter.url}/metrics",
+              flush=True)
     print(f"listening on {transport.host}:{transport.port} "
           f"(devices={args.devices} slots={args.max_slots}"
           f"{' autoscale' if args.autoscale else ''})", flush=True)
-    t0 = time.time()
+    t0 = time.perf_counter()
     transport.serve(expect_sessions=args.expect_sessions)
-    rep = server.report(time.time() - t0)
+    rep = server.report(time.perf_counter() - t0)
     summ = transport.summary()
+    if args.trace_out:
+        server.obs.tracer.write(args.trace_out)
+        print(f"trace written           : {args.trace_out}")
+    if exporter is not None:
+        exporter.close()
     print(f"sessions                : {int(rep['opened'])} opened, "
           f"{int(rep['closed'])} closed, {int(rep['evicted'])} evicted")
     print(f"wire in                 : {int(rep['wire_in_bytes'])} payload "
@@ -826,9 +912,18 @@ def main():
     ap.add_argument("--tol", type=float, default=0.5)
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="server: serve Prometheus /metrics (+ /metrics.json"
+                         ", /trace) while the socket loop runs")
+    ap.add_argument("--trace-out", default=None,
+                    help="server: write the span ring as Chrome trace-event "
+                         "JSON at shutdown")
     args = ap.parse_args()
     if args.length < 2:
         ap.error(f"--length must be >= 2, got {args.length}")
+    if args.metrics_port is not None and not 0 <= args.metrics_port <= 65535:
+        ap.error(f"--metrics-port must be in [0, 65535], got "
+                 f"{args.metrics_port}")
     if args.window < 1 or args.window > args.length:
         ap.error(f"--window must be in [1, --length], got {args.window}")
     if args.streams < 1:

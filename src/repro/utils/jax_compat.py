@@ -33,6 +33,8 @@ shard_map               ``jax.experimental.shard_map``  ``shard_map``
                         ``jax.shard_map``               ``shard_map``
 replication check       ``check_rep=``                  ``shard_map``
                         ``check_vma=``                  ``shard_map``
+profiler annotations    ``jax.profiler.TraceAnnotation``  ``trace_annotation``
+                        ``jax.profiler.TraceContext``   ``trace_annotation``
 ======================  ==============================  ========================
 """
 from __future__ import annotations
@@ -52,6 +54,7 @@ __all__ = [
     "make_mesh",
     "shard_map",
     "HAS_AXIS_TYPES",
+    "trace_annotation",
 ]
 
 # --- Pallas TPU memory spaces ------------------------------------------------
@@ -162,3 +165,22 @@ def shard_map(
         else:
             kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
     return _shard_map_impl(f, **kwargs)
+
+
+# --- profiler trace annotations ----------------------------------------------
+# jax.profiler.TraceAnnotation is the current spelling of the scoped
+# device-profile annotation; older releases only had TraceContext (and very
+# old ones neither).  The observability layer (repro.obs) routes through this
+# name so serving-loop spans can also land inside XLA device profiles.
+_trace_ann = getattr(jax.profiler, "TraceAnnotation", None)
+if _trace_ann is None:  # pragma: no cover -- old-API path
+    _trace_ann = getattr(jax.profiler, "TraceContext", None)
+
+if _trace_ann is not None:
+    trace_annotation = _trace_ann
+else:  # pragma: no cover -- profiler-less build
+    from contextlib import nullcontext as _nullcontext
+
+    def trace_annotation(name: str, **kwargs: Any):
+        """No-op stand-in when the installed jax has no profiler annotations."""
+        return _nullcontext()
