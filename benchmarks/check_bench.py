@@ -23,8 +23,19 @@ Four checks, all sized for the CI ``bench-artifacts`` job:
    if the donated table step compiled *anything* new: the serving loop's
    retrace-free contract, asserted against the live jit cache rather than
    inferred from timings.
+5. **transport/workload diff** (``--transport-fresh``) -- compares a fresh
+   ``BENCH_transport.json`` (schema ``bench_transport/v1``, written by
+   ``python -m repro.workload --out``) against the committed one.  The
+   schedule-determined integers of every scenario row (event/window
+   counts, sessions opened/closed/evicted, points in, queue depth,
+   drains) must match *exactly* -- a seeded trace replay is deterministic,
+   so any drift is a behavior change, not noise -- and the fresh run must
+   carry zero SLO violations.  Latency quantiles and delta hashes are
+   reported but not gated (they vary across machines / jax builds).
 
     PYTHONPATH=src python -m benchmarks.check_bench --fresh BENCH_fleet.json
+    PYTHONPATH=src python -m benchmarks.check_bench --skip-fleet \
+        --skip-cache-check --transport-fresh BENCH_transport.json
 """
 from __future__ import annotations
 
@@ -34,11 +45,11 @@ import subprocess
 import sys
 
 
-def load_baseline(spec: str):
+def load_baseline(spec: str, name: str = "BENCH_fleet.json"):
     """``@HEAD`` reads the committed artifact; anything else is a path."""
     if spec == "@HEAD":
         proc = subprocess.run(
-            ["git", "show", "HEAD:BENCH_fleet.json"],
+            ["git", "show", f"HEAD:{name}"],
             capture_output=True, text=True)
         if proc.returncode != 0:
             return None
@@ -124,6 +135,64 @@ def check_cache_flat() -> bool:
     return ok
 
 
+# schedule-determined per-scenario integers: a seeded trace replay is
+# deterministic, so these must match the committed baseline *exactly*
+TRANSPORT_EXACT_KEYS = (
+    "events", "windows", "sessions", "opened", "closed", "evicted",
+    "points_in", "max_queue_depth", "drains",
+)
+
+
+def check_transport(fresh: dict, base) -> bool:
+    """Diff ``bench_transport/v1`` scenario rows against the committed
+    artifact; always require the fresh run to be violation-free."""
+    ok = True
+    schema = fresh.get("schema")
+    if schema != "bench_transport/v1":
+        print(f"transport: unexpected schema {schema!r} -> FAIL")
+        ok = False
+    for row in fresh.get("rows", []):
+        viol = row.get("violations", [])
+        if viol:
+            print(f"transport {row['scenario']}: SLO violations in fresh "
+                  f"run -> FAIL: {viol}")
+            ok = False
+    if base is None:
+        print("transport: no committed baseline; determinism diff skipped")
+        return ok
+    b_rows = {r["scenario"]: r for r in base.get("rows", [])}
+    for row in fresh.get("rows", []):
+        name = row["scenario"]
+        b = b_rows.pop(name, None)
+        if b is None:
+            print(f"transport {name}: new scenario (no baseline row); "
+                  "determinism diff skipped")
+            continue
+        drift = [
+            f"{k}={row.get(k)}!={b.get(k)}" for k in TRANSPORT_EXACT_KEYS
+            if int(row.get(k, -1)) != int(b.get(k, -1))
+        ]
+        if abs(float(row.get("evict_rate", 0.0))
+               - float(b.get("evict_rate", 0.0))) > 1e-9:
+            drift.append(f"evict_rate={row.get('evict_rate')}"
+                         f"!={b.get('evict_rate')}")
+        hash_note = ("" if row.get("delta_sha256") == b.get("delta_sha256")
+                     else " (delta hash differs: machine/jax-build "
+                          "dependent, not gated)")
+        if drift:
+            print(f"transport {name}: DRIFT {', '.join(drift)} -> FAIL"
+                  f"{hash_note}")
+            ok = False
+        else:
+            print(f"transport {name}: deterministic counters match "
+                  f"(p99={row.get('p99_symbol_ms', 0.0):.1f}ms, not gated)"
+                  f"{hash_note} -> ok")
+    for name in sorted(b_rows):
+        print(f"transport {name}: missing from fresh artifact -> FAIL")
+        ok = False
+    return ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--fresh", default="BENCH_fleet.json",
@@ -147,21 +216,37 @@ def main() -> int:
                          "this many ms pass regardless of the fraction")
     ap.add_argument("--skip-cache-check", action="store_true",
                     help="only diff the artifacts (no jax work)")
+    ap.add_argument("--skip-fleet", action="store_true",
+                    help="skip the BENCH_fleet.json checks (workload-smoke "
+                         "runs only the transport gate)")
+    ap.add_argument("--transport-fresh", default=None, metavar="PATH",
+                    help="freshly generated BENCH_transport.json to gate")
+    ap.add_argument("--transport-baseline", default="@HEAD",
+                    help="committed transport artifact "
+                         "(@HEAD: git show HEAD:BENCH_transport.json)")
     args = ap.parse_args()
 
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    base = load_baseline(args.baseline)
     ok = True
-    if base is None:
-        print(f"no committed baseline ({args.baseline}); speedup + scale "
-              "gates skipped")
-    else:
-        ok = check_speedup(fresh, base, args.rel_tol) and ok
-        ok = check_scale_rows(fresh, base, args.scale_rel_tol) and ok
-    ok = check_obs_overhead(fresh, args.obs_tol, args.obs_abs_floor_ms) and ok
-    if not args.skip_cache_check:
-        ok = check_cache_flat() and ok
+    if not args.skip_fleet:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        base = load_baseline(args.baseline)
+        if base is None:
+            print(f"no committed baseline ({args.baseline}); speedup + scale "
+                  "gates skipped")
+        else:
+            ok = check_speedup(fresh, base, args.rel_tol) and ok
+            ok = check_scale_rows(fresh, base, args.scale_rel_tol) and ok
+        ok = check_obs_overhead(
+            fresh, args.obs_tol, args.obs_abs_floor_ms) and ok
+        if not args.skip_cache_check:
+            ok = check_cache_flat() and ok
+    if args.transport_fresh is not None:
+        with open(args.transport_fresh) as f:
+            t_fresh = json.load(f)
+        t_base = load_baseline(args.transport_baseline,
+                               "BENCH_transport.json")
+        ok = check_transport(t_fresh, t_base) and ok
     return 0 if ok else 1
 
 

@@ -267,6 +267,36 @@ def run(quick: bool = False) -> Tuple[List[tuple], dict]:
     summary["stream_service"]["scale"] = scale
     summary["stream_service"]["cadence"] = cadence
 
+    # trace-driven service rows: the workload harness replays a seeded
+    # scenario trace through the resident server.  Each row's trace comes
+    # from an *explicit per-row seed* (``scenario_seed(name, 0)``), never a
+    # shared rng threaded across rows, so reordering, adding, or deleting
+    # rows cannot perturb any other row's schedule (pinned by the
+    # reorder-invariance test in tests/test_workload.py).
+    from repro.workload import Workload, scenario_seed
+    from repro.workload.replay import replay_trace
+
+    wl_shape = {"sessions": 4 if quick else 8, "length": svc_len,
+                "window": svc_win}
+    workload_summary = {}
+    for sc_name in ("bursty", "flash_crowd"):
+        wl = Workload(sc_name, seed=scenario_seed(sc_name, 0), **wl_shape)
+        res = replay_trace(wl.trace(), cfg=cfg, server_kw=wl.server_kw())
+        drains = max(int(res.queue["drains"]), 1)
+        pts = res.counters["points_in"]
+        rows.append((f"workload_{sc_name}_{wl_shape['sessions']}x{svc_len}"
+                     f"_w{svc_win}", 1e6 * res.wall_seconds / drains,
+                     pts / max(res.wall_seconds, 1e-12)))
+        workload_summary[sc_name] = {
+            "seed": scenario_seed(sc_name, 0),
+            "points_per_s": pts / max(res.wall_seconds, 1e-12),
+            "drain_ms": 1e3 * res.wall_seconds / drains,
+            "max_queue_depth": res.queue["max_depth"],
+            "evicted": res.counters["evicted"],
+            "p99_symbol_ms": res.latency["p99_ms"],
+        }
+    summary["workload"] = workload_summary
+
     # flight-recorder overhead: the identical steady-state tick with the
     # observability layer enabled (the default) vs disabled (obs=False,
     # shared null instruments).  Interleaved min-of-2 runs cancel most

@@ -45,24 +45,14 @@ CLI (CPU dry-run; forces N host devices before jax initializes, mirroring
 """
 from __future__ import annotations
 
-import os
-import sys
-
 if __name__ == "__main__":  # pragma: no cover -- CLI path only
-    # Must precede the jax import below: jax locks the device count on first
-    # init.  --devices is pre-scanned from argv because argparse can only run
-    # after the (jax-importing) library half of this module loads.
-    _n = "8"
-    for _i, _a in enumerate(sys.argv):
-        if _a == "--devices" and _i + 1 < len(sys.argv):
-            _n = sys.argv[_i + 1]
-        elif _a.startswith("--devices="):
-            _n = _a.split("=", 1)[1]
-    if int(_n) > 1:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={_n} "
-            + os.environ.get("XLA_FLAGS", "")
-        )
+    # Must precede the jax import below: jax locks the device count on
+    # first init, and argparse can only run after the (jax-importing)
+    # library half of this module loads.  Shared pre-scan with the
+    # stream/transport/workload CLIs; the fleet dry-run defaults to 8.
+    from repro.launch.cli import prescan_host_devices
+
+    prescan_host_devices(default="8")
 
 import argparse
 import functools
@@ -124,21 +114,14 @@ def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
     Called before any jax work so bad invocations fail fast (exit 2 via
     ``ap.error``) instead of surfacing as tracebacks from ``run_fleet``.
     """
-    if args.streams < 1:
-        ap.error(f"--streams must be >= 1, got {args.streams}")
-    if args.length < 2:
-        ap.error(f"--length must be >= 2, got {args.length}")
-    if args.tol <= 0:
-        ap.error(f"--tol must be > 0, got {args.tol}")
-    if not 0 < args.alpha <= 1:
-        ap.error(f"--alpha must be in (0, 1], got {args.alpha}")
+    from repro.launch.cli import validate_shared_args
+
+    validate_shared_args(ap, args)
     if args.chunk is not None and args.chunk < 0:
         ap.error(f"--chunk must be >= 0 (0 = whole-stream), got {args.chunk}")
     if args.chunk and args.chunk > args.length:
         ap.error(f"--chunk {args.chunk} exceeds --length {args.length}: "
                  "the ingestion window cannot outgrow the stream")
-    if args.digitize_every < 0:
-        ap.error(f"--digitize-every must be >= 0, got {args.digitize_every}")
     if args.digitize_every and not args.chunk:
         ap.error("--digitize-every requires --chunk (streaming mode)")
     if args.pods < 1:
@@ -375,6 +358,9 @@ def fleet_report(tele: Dict[str, jax.Array], wall_seconds: float,
 
 
 def main():
+    from repro.launch.cli import (
+        add_devices_arg, add_metrics_args, add_symed_args)
+
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--streams", type=int, default=256)
     ap.add_argument("--length", type=int, default=1024)
@@ -385,15 +371,15 @@ def main():
                     help="digitize cadence k: run the receiver's clustering "
                          "every k windows so symbols stream out online "
                          "(0: once at end-of-stream; requires --chunk)")
-    ap.add_argument("--devices", type=int, default=8,
-                    help="forced host device count for the CPU dry-run")
     ap.add_argument("--pods", type=int, default=1,
                     help="shard over a (pod, data) mesh with this many pods "
                          "(hierarchical telemetry reduction)")
-    ap.add_argument("--tol", type=float, default=0.5)
-    ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--reconstruct", action="store_true",
                     help="also reconstruct + score DTW error (slower)")
+    add_devices_arg(ap, default=8,
+                    help="forced host device count for the CPU dry-run")
+    add_symed_args(ap)
+    add_metrics_args(ap)
     args = ap.parse_args()
 
     validate_cli_args(ap, args)
@@ -408,14 +394,19 @@ def main():
     streams = max(args.streams - args.streams % n_dev, n_dev)
     cfg = SymEDConfig(tol=args.tol, alpha=args.alpha, n_max=256, k_max=32,
                       len_max=256)
-    fleet = make_fleet(streams, args.length, seed=0)
+    fleet = make_fleet(streams, args.length, seed=args.seed)
 
     from repro.obs import Observability
 
     obs = Observability()
+    exporter = None
+    if args.metrics_port is not None:
+        from repro.obs.export import start_exporter
+        exporter = start_exporter(obs, args.metrics_port)
+        print(f"metrics exporter        : {exporter.url}/metrics")
     t0 = time.perf_counter()
     out, tele = run_fleet(
-        fleet, cfg, jax.random.key(0), mesh,
+        fleet, cfg, jax.random.key(args.seed), mesh,
         chunk_len=args.chunk or None,
         digitize_every_k=args.digitize_every or None,
         reconstruct=args.reconstruct, axis=mesh_axes, obs=obs,
@@ -445,6 +436,16 @@ def main():
     if args.reconstruct:
         print(f"mean DTW err (pieces)   : {np.asarray(out['re_pieces']).mean():.3f}")
         print(f"mean DTW err (symbols)  : {np.asarray(out['re_symbols']).mean():.3f}")
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"trace written           : {args.trace_out} "
+              f"({obs.tracer.recorded} events, load at ui.perfetto.dev)")
+    if exporter is not None:
+        if args.metrics_linger:
+            print(f"metrics exporter        : lingering "
+                  f"{args.metrics_linger:.0f}s for scrapes", flush=True)
+            time.sleep(args.metrics_linger)
+        exporter.close()
 
 
 if __name__ == "__main__":

@@ -31,31 +31,23 @@ closes the least-recently-active session to make room -- its final output is
 parked in ``server.evicted``); ``close`` flushes the tail, emits the closing
 delta frame, and frees the slot for reuse.
 
-CLI (simulated-arrival driver; ``--devices N`` forces N host CPU devices and
-shards the slot table over a ``data`` mesh axis):
+CLI (trace-driven; arrivals come from a ``repro.workload`` trace --
+``--workload`` names a scenario or a recorded ``workload_trace/v1`` jsonl,
+and the legacy ``--arrival-pattern`` values are deprecated shims that
+synthesize the equivalent trace.  ``--devices N`` forces N host CPU devices
+and shards the slot table over a ``data`` mesh axis):
 
     PYTHONPATH=src python -m repro.launch.stream --sessions 6 --max-slots 4 \
-        --length 384 --window 48 --arrival-pattern bursty --evict --verify
+        --length 384 --window 48 --workload bursty --evict --verify
 """
 from __future__ import annotations
 
-import os
-import sys
-
 if __name__ == "__main__":  # pragma: no cover -- CLI path only
-    # Must precede the jax import below (jax locks the device count on first
-    # init); same pre-scan dance as repro.launch.fleet.
-    _n = "1"
-    for _i, _a in enumerate(sys.argv):
-        if _a == "--devices" and _i + 1 < len(sys.argv):
-            _n = sys.argv[_i + 1]
-        elif _a.startswith("--devices="):
-            _n = _a.split("=", 1)[1]
-    if int(_n) > 1:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={_n} "
-            + os.environ.get("XLA_FLAGS", "")
-        )
+    # Must precede the jax import below (jax locks the device count on
+    # first init); shared pre-scan with the fleet/transport/workload CLIs.
+    from repro.launch.cli import prescan_host_devices
+
+    prescan_host_devices()
 
 import argparse
 import contextlib
@@ -946,135 +938,91 @@ class StreamServer:
 # ----------------------------------------------------------------- CLI
 
 
-def _arrival_schedule(pattern: str, n_sessions: int, n_windows: int, rng):
-    """Yield per-tick lists of (session index, window index) arrivals."""
-    cursors = [0] * n_sessions
-    if pattern == "roundrobin":
-        while any(c < n_windows for c in cursors):
-            tick = [(s, cursors[s]) for s in range(n_sessions)
-                    if cursors[s] < n_windows]
-            for s, _ in tick:
-                cursors[s] += 1
-            yield tick
-    elif pattern == "random":
-        while any(c < n_windows for c in cursors):
-            live = [s for s in range(n_sessions) if cursors[s] < n_windows]
-            pick = [s for s in live if rng.random() < 0.6] or live[:1]
-            tick = [(s, cursors[s]) for s in pick]
-            for s, _ in tick:
-                cursors[s] += 1
-            yield tick
-    elif pattern == "bursty":
-        s = 0
-        while any(c < n_windows for c in cursors):
-            live = [i for i in range(n_sessions) if cursors[i] < n_windows]
-            s = live[s % len(live)]
-            burst = min(int(rng.integers(1, 4)), n_windows - cursors[s])
-            for _ in range(burst):
-                yield [(s, cursors[s])]
-                cursors[s] += 1
-            s += 1
-    else:  # pragma: no cover -- argparse choices guard this
-        raise ValueError(pattern)
-
-
 def validate_cli_args(ap: argparse.ArgumentParser, args) -> None:
-    """Fail fast (exit 2) before any jax work, like the fleet CLI."""
-    if args.sessions < 1:
-        ap.error(f"--sessions must be >= 1, got {args.sessions}")
-    if args.max_slots < 1:
-        ap.error(f"--max-slots must be >= 1, got {args.max_slots}")
-    if args.length < 2:
-        ap.error(f"--length must be >= 2, got {args.length}")
-    if args.window < 1:
-        ap.error(f"--window must be >= 1, got {args.window}")
-    if args.window > args.length:
-        ap.error(f"--window {args.window} exceeds --length {args.length}")
-    if args.digitize_every < 0:
-        ap.error(f"--digitize-every must be >= 0, got {args.digitize_every}")
+    """Fail fast (exit 2) before any jax work, like the fleet CLI.
+
+    Shared-flag checks live in ``repro.launch.cli.validate_shared_args``;
+    only the stream-specific constraints remain here.
+    """
+    from repro.launch.cli import validate_shared_args
+
+    validate_shared_args(ap, args)
     if args.dtw_every < 0:
         ap.error(f"--dtw-every must be >= 0, got {args.dtw_every}")
-    if args.tol <= 0:
-        ap.error(f"--tol must be > 0, got {args.tol}")
-    if args.sessions > args.max_slots and not args.evict:
+    if args.sessions > args.max_slots and not args.evict \
+            and args.workload is None:
         ap.error(f"--sessions {args.sessions} exceeds --max-slots "
                  f"{args.max_slots}; pass --evict to allow LRU eviction")
-    if args.devices < 1:
-        ap.error(f"--devices must be >= 1, got {args.devices}")
-    if args.max_slots % args.devices:
-        ap.error(f"--max-slots {args.max_slots} must divide over "
-                 f"--devices {args.devices}")
-    if args.min_slots is not None:
-        if not 1 <= args.min_slots <= args.max_slots:
-            ap.error(f"--min-slots {args.min_slots} must be in "
-                     f"[1, --max-slots {args.max_slots}]")
-        if args.min_slots % args.devices:
-            ap.error(f"--min-slots {args.min_slots} must divide over "
-                     f"--devices {args.devices}")
-    if args.shrink_patience < 1:
-        ap.error(f"--shrink-patience must be >= 1, got {args.shrink_patience}")
-    if args.metrics_port is not None and not 0 <= args.metrics_port <= 65535:
-        ap.error(f"--metrics-port must be in [0, 65535], got "
-                 f"{args.metrics_port}")
-    if args.metrics_linger < 0:
-        ap.error(f"--metrics-linger must be >= 0, got {args.metrics_linger}")
+    if args.workload is not None and args.arrival_pattern is not None:
+        ap.error("--workload and --arrival-pattern are mutually exclusive")
+
+
+def _build_workload(args):
+    """Resolve the CLI's arrival flags into a ``repro.workload`` trace.
+
+    Precedence: ``--workload FILE.jsonl`` (recorded trace) >
+    ``--workload SCENARIO`` (synthesized with the CLI's shape knobs) >
+    ``--arrival-pattern`` (deprecated shim) > silent ``roundrobin``.
+    """
+    from repro.workload import SCENARIOS, Trace, Workload, scenario_seed
+
+    if args.workload is not None and args.workload not in SCENARIOS:
+        return Trace.load(args.workload)  # recorded workload_trace/v1 jsonl
+    if args.workload is not None:
+        wl = Workload(args.workload,
+                      seed=scenario_seed(args.workload, args.seed),
+                      sessions=args.sessions, length=args.length,
+                      window=args.window)
+        return wl.trace()
+    pattern = args.arrival_pattern
+    wl = Workload.from_pattern(
+        pattern if pattern is not None else "roundrobin",
+        sessions=args.sessions, length=args.length, window=args.window,
+        seed=args.seed, _warn=pattern is not None)
+    return wl.trace()
 
 
 def main():
+    from repro.launch.cli import (
+        add_devices_arg, add_metrics_args, add_slot_table_args,
+        add_symed_args)
+
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--sessions", type=int, default=6,
                     help="simulated streams arriving at the service")
-    ap.add_argument("--max-slots", type=int, default=4,
-                    help="resident slot-table capacity")
     ap.add_argument("--length", type=int, default=384)
     ap.add_argument("--window", type=int, default=48,
                     help="arrival window cap (ragged arrivals are padded)")
-    ap.add_argument("--arrival-pattern", default="roundrobin",
-                    choices=("roundrobin", "random", "bursty"))
-    ap.add_argument("--digitize-every", type=int, default=1)
+    ap.add_argument("--workload", default=None, metavar="NAME|FILE",
+                    help="arrival trace: a repro.workload scenario name or "
+                         "a recorded workload_trace/v1 jsonl "
+                         "(default: roundrobin)")
+    ap.add_argument("--arrival-pattern", default=None,
+                    choices=("roundrobin", "random", "bursty"),
+                    help="(deprecated: use --workload) legacy arrival shim")
     ap.add_argument("--dtw-every", type=int, default=0,
                     help="online DTW monitor cadence in windows (0: off)")
-    ap.add_argument("--evict", action="store_true",
-                    help="LRU-evict when sessions exceed slots")
-    ap.add_argument("--autoscale", action="store_true",
-                    help="grow/shrink the slot table between steps "
-                         "(power-of-two ladder from --min-slots)")
-    ap.add_argument("--min-slots", type=int, default=None,
-                    help="autoscale floor (default: --devices)")
-    ap.add_argument("--shrink-patience", type=int, default=3,
-                    help="consecutive low-occupancy ticks before the table "
-                         "walks down the ladder (1: shrink immediately)")
-    ap.add_argument("--pretrace", action="store_true",
-                    help="warm the jit cache for every ladder capacity at "
-                         "server init (no tracing during serving)")
     ap.add_argument("--verify", action="store_true",
                     help="check delta concatenation against symed_encode")
-    ap.add_argument("--devices", type=int, default=1,
-                    help="forced host device count; >1 shards the slot table")
-    ap.add_argument("--tol", type=float, default=0.5)
-    ap.add_argument("--alpha", type=float, default=0.01)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--metrics-port", type=int, default=None,
-                    help="serve Prometheus /metrics (+ /metrics.json, "
-                         "/trace) on this port for the run's duration")
-    ap.add_argument("--metrics-linger", type=float, default=0.0,
-                    help="keep the metrics endpoint up this many seconds "
-                         "after the run finishes (scrape window)")
-    ap.add_argument("--trace-out", default=None,
-                    help="write the span ring as Chrome trace-event JSON "
-                         "(load at ui.perfetto.dev)")
+    add_slot_table_args(ap, max_slots=4)
+    add_devices_arg(
+        ap, help="forced host device count; >1 shards the slot table")
+    add_symed_args(ap)
+    add_metrics_args(ap)
     args = ap.parse_args()
     validate_cli_args(ap, args)
 
-    from repro.data.synthetic import make_fleet
     from repro.launch.fleet import fleet_data_mesh
+    from repro.workload.replay import replay_trace
 
+    trace = _build_workload(args)
+    window_cap = trace.window  # a recorded trace carries its own shape
     cfg = SymEDConfig(tol=args.tol, alpha=args.alpha, n_max=256, k_max=32,
                       len_max=256)
     mesh = fleet_data_mesh() if args.devices > 1 else None
     obs = Observability(trace_capacity=65536)
     server = StreamServer(
-        cfg, max_sessions=args.max_slots, window_cap=args.window,
+        cfg, max_sessions=args.max_slots, window_cap=window_cap,
         digitize_every_k=args.digitize_every, dtw_every=args.dtw_every,
         evict_idle=args.evict, autoscale=args.autoscale,
         min_slots=args.min_slots, shrink_patience=args.shrink_patience,
@@ -1085,43 +1033,14 @@ def main():
         from repro.obs.export import start_exporter
         exporter = start_exporter(obs, args.metrics_port)
         print(f"metrics exporter        : {exporter.url}/metrics")
-    data = np.asarray(make_fleet(args.sessions, args.length, seed=args.seed))
-    keys = jax.random.split(jax.random.key(args.seed), args.sessions)
-    n_windows = -(-args.length // args.window)
-    rng = np.random.default_rng(args.seed)
 
-    sids = [f"stream-{i}" for i in range(args.sessions)]
-    deltas: Dict[str, list] = {sid: [] for sid in sids}
-    closed: Dict[str, dict] = {}
+    res = replay_trace(trace, cfg=cfg, server=server, verify=args.verify)
 
-    t0 = time.perf_counter()
-    for tick in _arrival_schedule(
-            args.arrival_pattern, args.sessions, n_windows, rng):
-        batch = {}
-        for s, w in tick:
-            sid = sids[s]
-            if sid in closed or sid in server.evicted:
-                continue  # stream terminated (eviction drops the remainder)
-            if sid not in server:
-                server.open(sid, key=keys[s])
-            batch[sid] = data[s, w * args.window: (w + 1) * args.window]
-        # opening a session may LRU-evict one queued earlier this same tick
-        batch = {sid: w for sid, w in batch.items() if sid in server}
-        if not batch:
-            continue
-        for sid, d in server.ingest_many(batch).items():
-            deltas[sid].append(d)
-        for sid in list(batch):
-            if sid in server and server.session_stats(sid)["t_seen"] >= args.length:
-                closed[sid] = server.close(sid)
-    wall = time.perf_counter() - t0
-    closed.update(server.evicted)
-
-    rep = server.report(wall)
+    rep = server.report(res.wall_seconds)
     print(f"devices / table shards  : {args.devices}")
     print(f"slot table              : {args.max_slots} slots"
           f"{' (autoscaled)' if args.autoscale else ''}, "
-          f"window cap {args.window}, pattern {args.arrival_pattern}")
+          f"window cap {window_cap}, workload {trace.name}")
     print(f"sessions                : {int(rep['opened'])} opened, "
           f"{int(rep['closed'])} closed, {int(rep['evicted'])} evicted")
     # stable machine-readable summary (CI smoke jobs grep these key=value
@@ -1142,30 +1061,18 @@ def main():
     print(f"symbol latency          : {rep['ms_per_symbol']:.3f} ms/symbol "
           f"(paper: 42ms single-CPU)")
     if args.dtw_every:
-        vals = [r["dtw"] for r in closed.values() if r["dtw"] is not None]
+        vals = [s["dtw"] for s in res.sessions.values()
+                if s["dtw"] is not None]
         if vals:
             print(f"online DTW monitor      : mean {np.mean(vals):.3f} "
                   f"over {len(vals)} sessions")
 
     if args.verify:
-        from repro.core.symed import symed_encode
-
-        checked = 0
-        for i, sid in enumerate(sids):
-            if sid not in closed:
-                continue
-            res = closed[sid]
-            got = np.concatenate(
-                [d["labels"] for d in deltas[sid]] + [res["delta"]["labels"]])
-            t_seen = res["t_seen"]
-            if not t_seen:
-                continue
-            ref = symed_encode(
-                jnp.asarray(data[i, :t_seen]), cfg, keys[i], reconstruct=False)
-            want = np.asarray(ref["symbols_online"])[: int(ref["n_pieces"])]
-            np.testing.assert_array_equal(got, want)
-            checked += 1
-        print(f"delta equivalence       : OK ({checked} sessions bitwise)")
+        # the replay engine already ran the bitwise delta-concatenation
+        # check against symed_encode (replay_trace(verify=True) raises on
+        # any mismatch)
+        print(f"delta equivalence       : OK ({res.verified} sessions "
+              f"bitwise)")
 
     # flight-recorder summary (stable key=value line, like stream_summary)
     snap = obs.snapshot()

@@ -51,23 +51,14 @@ CI transport-smoke job runs as separate processes):
 """
 from __future__ import annotations
 
-import os
 import sys
 
 if __name__ == "__main__":  # pragma: no cover -- CLI path only
-    # Must precede the jax import below (jax locks the device count on first
-    # init); same pre-scan dance as repro.launch.stream.
-    _n = "1"
-    for _i, _a in enumerate(sys.argv):
-        if _a == "--devices" and _i + 1 < len(sys.argv):
-            _n = sys.argv[_i + 1]
-        elif _a.startswith("--devices="):
-            _n = _a.split("=", 1)[1]
-    if int(_n) > 1:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={_n} "
-            + os.environ.get("XLA_FLAGS", "")
-        )
+    # Must precede the jax import below (jax locks the device count on
+    # first init); shared pre-scan with the stream/fleet/workload CLIs.
+    from repro.launch.cli import prescan_host_devices
+
+    prescan_host_devices()
 
 import argparse
 import select
@@ -270,11 +261,27 @@ class SenderClient:
                     raise
                 time.sleep(0.25)
 
-    def open(self, sid: str, seed: int) -> None:
+    def open(self, sid: str, seed: int,
+             mode: Optional[str] = None) -> None:
+        """Open ``sid``; ``mode`` overrides the client default per session
+        (mixed raw/pieces fleets share one socket, keeping frame order)."""
         if sid in self._sessions:
             raise ValueError(f"session {sid!r} is already open")
-        self._sessions[sid] = _ClientSession(sid, self.mode)
-        self.sock.sendall(encode_open(sid, self.mode, seed))
+        if mode is None:
+            mode_int = self.mode
+        elif mode in ("raw", "pieces"):
+            mode_int = MODE_PIECES if mode == "pieces" else MODE_RAW
+        else:
+            raise ValueError(f"mode must be 'raw' or 'pieces', got {mode!r}")
+        self._sessions[sid] = _ClientSession(sid, mode_int)
+        self.sock.sendall(encode_open(sid, mode_int, seed))
+
+    def settled(self, sid: str) -> bool:
+        """True once the receiver closed ``sid`` (CLOSED arrived -- clean
+        or evicted); further sends for it would be dropped server-side."""
+        self._drain(block=False)
+        sess = self._sessions.get(sid)
+        return sess is not None and sess.result is not None
 
     def send(self, sid: str, window) -> None:
         """Ship one window; pieces mode compresses it locally first."""
@@ -737,6 +744,7 @@ def _serve_main(args) -> int:
         cfg, max_sessions=args.max_slots, window_cap=args.window,
         digitize_every_k=args.digitize_every, evict_idle=args.evict,
         autoscale=args.autoscale, min_slots=args.min_slots,
+        shrink_patience=args.shrink_patience, pretrace=args.pretrace,
         seed=args.seed, mesh=mesh,
     )
     transport = TransportServer(server, host=args.host, port=args.port)
@@ -757,6 +765,10 @@ def _serve_main(args) -> int:
         server.obs.tracer.write(args.trace_out)
         print(f"trace written           : {args.trace_out}")
     if exporter is not None:
+        if args.metrics_linger:
+            print(f"metrics exporter        : lingering "
+                  f"{args.metrics_linger:.0f}s for scrapes", flush=True)
+            time.sleep(args.metrics_linger)
         exporter.close()
     print(f"sessions                : {int(rep['opened'])} opened, "
           f"{int(rep['closed'])} closed, {int(rep['evicted'])} evicted")
@@ -876,6 +888,10 @@ def _demo_main(args) -> int:
 
 
 def main():
+    from repro.launch.cli import (
+        add_devices_arg, add_metrics_args, add_slot_table_args,
+        add_symed_args, validate_shared_args)
+
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     role = ap.add_mutually_exclusive_group()
     role.add_argument("--serve", action="store_true",
@@ -899,35 +915,16 @@ def main():
                          "symed_encode")
     ap.add_argument("--connect-timeout", type=float, default=120.0,
                     help="sender: retry the connect this long")
-    ap.add_argument("--max-slots", type=int, default=8)
-    ap.add_argument("--min-slots", type=int, default=None)
-    ap.add_argument("--autoscale", action="store_true")
-    ap.add_argument("--evict", action="store_true")
-    ap.add_argument("--digitize-every", type=int, default=1)
     ap.add_argument("--expect-sessions", type=int, default=None,
                     help="server: exit after this many sessions closed")
-    ap.add_argument("--devices", type=int, default=1,
-                    help="server: forced host device count (>1 shards the "
-                         "slot table)")
-    ap.add_argument("--tol", type=float, default=0.5)
-    ap.add_argument("--alpha", type=float, default=0.01)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--metrics-port", type=int, default=None,
-                    help="server: serve Prometheus /metrics (+ /metrics.json"
-                         ", /trace) while the socket loop runs")
-    ap.add_argument("--trace-out", default=None,
-                    help="server: write the span ring as Chrome trace-event "
-                         "JSON at shutdown")
+    add_slot_table_args(ap, max_slots=8)
+    add_devices_arg(
+        ap, help="server: forced host device count (>1 shards the "
+                 "slot table)")
+    add_symed_args(ap)
+    add_metrics_args(ap)
     args = ap.parse_args()
-    if args.length < 2:
-        ap.error(f"--length must be >= 2, got {args.length}")
-    if args.metrics_port is not None and not 0 <= args.metrics_port <= 65535:
-        ap.error(f"--metrics-port must be in [0, 65535], got "
-                 f"{args.metrics_port}")
-    if args.window < 1 or args.window > args.length:
-        ap.error(f"--window must be in [1, --length], got {args.window}")
-    if args.streams < 1:
-        ap.error(f"--streams must be >= 1, got {args.streams}")
+    validate_shared_args(ap, args)
     if args.serve:
         return _serve_main(args)
     if args.send:

@@ -1,0 +1,44 @@
+"""Trace-driven workload harness: scenarios, replay, tail-latency SLOs.
+
+The load half of the benchmarking story (``repro.obs`` is the measurement
+half): seeded synthesizers build ``workload_trace/v1`` arrival traces for
+a scenario zoo, a replay engine drives them -- bit-reproducibly -- through
+the in-process ``StreamServer`` or the loopback TCP transport, and an SLO
+layer turns the scraped quantiles into a pass/fail gate
+(``BENCH_transport.json`` in CI).
+
+    PYTHONPATH=src python -m repro.workload --scenario flash_crowd \
+        --slo p99_symbol_ms=50
+
+Import layering: this module (trace schema, scenarios, SLOs) is
+numpy-only, so the CLI can pin the forced host device count before jax
+loads.  The replay engine pulls in jax; import it as
+``repro.workload.replay`` or touch the lazily-forwarded names below.
+"""
+from repro.workload.scenarios import (
+    SCENARIOS, Scenario, Workload, legacy_arrival_schedule, scenario_seed,
+    synthesize,
+)
+from repro.workload.slo import (
+    KNOWN_SLOS, SLOViolation, check_slos, parse_slo, parse_slo_specs,
+)
+from repro.workload.trace import SCHEMA, TICK_MS, Trace, TraceBuilder, TraceEvent
+
+__all__ = [
+    "SCHEMA", "TICK_MS", "Trace", "TraceBuilder", "TraceEvent",
+    "SCENARIOS", "Scenario", "Workload", "legacy_arrival_schedule",
+    "scenario_seed", "synthesize",
+    "KNOWN_SLOS", "SLOViolation", "check_slos", "parse_slo",
+    "parse_slo_specs",
+    "ReplayResult", "replay_trace",
+]
+
+_LAZY = {"ReplayResult", "replay_trace"}
+
+
+def __getattr__(name):
+    # replay drags in jax; keep it out of the pre-device-pinning import path
+    if name in _LAZY:
+        from repro.workload import replay as _replay
+        return getattr(_replay, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
